@@ -1,0 +1,60 @@
+"""Shared benchmark utilities: graph suite + timing."""
+from __future__ import annotations
+
+import time
+
+import jax
+
+from repro.core import DeviceGraph, Graph, build_blocked, grid_graph, rmat_graph
+
+# Scaled-down analogue of the paper's Table 2 suite (CPU container):
+# scale-free RMAT graphs with permuted ids (poor locality) + one
+# good-locality control (grid, standing in for Hollywood).
+SUITE = {
+    "rmat14": lambda: rmat_graph(14, 8, seed=1, weights=True),
+    "rmat15": lambda: rmat_graph(15, 8, seed=2, weights=True),
+    "rmat16": lambda: rmat_graph(16, 8, seed=3, weights=True),
+    "grid256": lambda: _weighted_grid(256),
+}
+
+BLOCK_SIZE = 2048  # default TOCAB block for the CPU-scale suite
+
+
+def _weighted_grid(side):
+    import numpy as np
+    g = grid_graph(side, side)
+    rng = np.random.default_rng(0)
+    return Graph(g.n, g.rowptr, g.colidx,
+                 rng.random(g.m, dtype=np.float32))
+
+
+_CACHE: dict = {}
+
+
+def get_graph(name: str):
+    if name not in _CACHE:
+        g = SUITE[name]()
+        _CACHE[name] = (
+            g,
+            DeviceGraph.from_host(g),
+            build_blocked(g, block_size=BLOCK_SIZE, direction="pull"),
+            build_blocked(g, block_size=BLOCK_SIZE, direction="push"),
+        )
+    return _CACHE[name]
+
+
+def timeit(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
+    """Median wall-time (µs) of a jitted call."""
+    for _ in range(warmup):
+        jax.block_until_ready(fn(*args, **kw))
+    ts = []
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn(*args, **kw))
+        ts.append(time.perf_counter() - t0)
+    ts.sort()
+    return ts[len(ts) // 2] * 1e6
+
+
+def emit(name: str, us: float, derived: str = ""):
+    print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,65 @@
+"""Regenerate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+experiments/ JSON artifacts.  Run after dryrun/roofline sweeps:
+
+    PYTHONPATH=src python -m benchmarks.report
+"""
+import json
+import os
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _load(d):
+    recs = []
+    p = os.path.join(ROOT, "experiments", d)
+    for f in sorted(os.listdir(p)):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(p, f))))
+    return recs
+
+
+def _fmt(x, digits=3):
+    return f"{x:.{digits}e}" if isinstance(x, float) else str(x)
+
+
+def dryrun_table() -> str:
+    recs = _load("dryrun")
+    lines = ["| arch | shape | mesh | compile | args/dev (GiB) | temp/dev (GiB) | HLO ops |",
+             "|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        if not r.get("ok"):
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+                         f"FAIL: {r.get('error','?')} | | | |")
+            continue
+        temp = ""
+        ma = r.get("memory_analysis") or ""
+        if "temp_size_in_bytes=" in ma:
+            t = int(ma.split("temp_size_in_bytes=")[1].split(",")[0])
+            temp = f"{t/2**30:.2f}"
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} | "
+            f"{r['compile_s']}s | {r['arg_bytes_per_device']/2**30:.2f} | "
+            f"{temp} | {r['hlo_ops']} |")
+    return "\n".join(lines)
+
+
+def roofline_table() -> str:
+    recs = _load("roofline")
+    lines = ["| arch | shape | T_compute (s) | T_memory (s) | T_collective (s)"
+             " | dominant | MODEL_FLOPs | useful frac | roofline frac |",
+             "|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(recs, key=lambda r: (r["arch"], r["shape"])):
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {_fmt(r['t_compute'])} | "
+            f"{_fmt(r['t_memory'])} | {_fmt(r['t_collective'])} | "
+            f"**{r['dominant']}** | {_fmt(r.get('model_flops', 0.0))} | "
+            f"{r.get('useful_flop_frac', 0):.3f} | "
+            f"{r.get('roofline_fraction', 0):.4f} |")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## Dry-run matrix\n")
+    print(dryrun_table())
+    print("\n## Roofline table (single-pod 16x16)\n")
+    print(roofline_table())

@@ -1,0 +1,136 @@
+"""Roofline harness (§Roofline deliverable): accurate three-term analysis
+per (arch × shape) on the single-pod production mesh.
+
+Method.  ``cost_analysis`` on a scan-over-layers module counts the while
+body ONCE (XLA cost analysis has no trip counts), so LM cells are measured
+with a **two-point unrolled fit**: compile the model unrolled at depths
+L₁ < L₂ (small, fast), fit the exact per-layer slope of every quantity
+(FLOPs, bytes, collective wire bytes), and extrapolate to the full depth —
+exact for depth-linear programs, which scan models are by construction.
+The vocab/embedding intercept is captured by the fit's constant term.
+GNN / recsys models are python-unrolled already → measured directly.
+
+Run:  PYTHONPATH=src python -m benchmarks.roofline [--arch A --shape S]
+Writes experiments/roofline/<arch>__<shape>.json + a summary table.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import dataclasses
+import json
+import time
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.dist.sharding import use_mesh_rules
+from repro.launch.cells import build_cell
+from repro.launch.hlo_analysis import (
+    HW, parse_collectives, roofline_terms)
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(
+    os.path.abspath(__file__))), "experiments", "roofline")
+
+
+def _measure(arch_id, shape_name, mesh, overrides=None):
+    with use_mesh_rules(mesh):
+        cell = build_cell(arch_id, shape_name, mesh, overrides=overrides)
+        compiled = jax.jit(cell.fn).lower(*cell.args).compile()
+    n = mesh.devices.size
+    cost = compiled.cost_analysis() or {}
+    coll = parse_collectives(compiled.as_text(), n)
+    return {
+        "flops": float(cost.get("flops", 0.0)) * n,
+        "bytes": float(cost.get("bytes accessed", 0.0)) * n,
+        "wire": coll.wire_bytes,
+        "coll_bytes": coll.total_bytes,
+        "counts": coll.counts,
+        "model_flops": cell.model_flops,
+    }
+
+
+def measure_cell(arch_id: str, shape_name: str, mesh) -> dict:
+    spec = get_arch(arch_id)
+    if spec.family != "lm":
+        return _measure(arch_id, shape_name, mesh)
+    cfg = spec.make_model_cfg()
+    step = 2 if cfg.pair_scan else 1
+    l1, l2 = 2 * step, 4 * step
+    m1 = _measure(arch_id, shape_name, mesh,
+                  overrides={"use_scan": False, "n_layers": l1})
+    m2 = _measure(arch_id, shape_name, mesh,
+                  overrides={"use_scan": False, "n_layers": l2})
+    L = cfg.n_layers
+    out = {"counts": {}}
+    for k in ("flops", "bytes", "wire", "coll_bytes"):
+        slope = (m2[k] - m1[k]) / (l2 - l1)
+        out[k] = m1[k] + slope * (L - l1)
+    for k, v1 in m1["counts"].items():
+        slope = (m2["counts"][k] - v1) / (l2 - l1)
+        out["counts"][k] = round(v1 + slope * (L - l1))
+    # model_flops of the FULL config (not the shallow fit points)
+    with use_mesh_rules(mesh):
+        full = build_cell(arch_id, shape_name, mesh)
+    out["model_flops"] = full.model_flops
+    out["fit_points"] = {"l1": l1, "l2": l2, "flops_l1": m1["flops"],
+                         "flops_l2": m2["flops"]}
+    return out
+
+
+def analyse(arch_id: str, shape_name: str, mesh=None,
+            overrides=None) -> dict:
+    mesh = mesh or make_production_mesh()
+    n = mesh.devices.size
+    t0 = time.time()
+    if overrides is None:
+        m = measure_cell(arch_id, shape_name, mesh)
+    else:  # §Perf variants measure directly with explicit overrides
+        m = _measure(arch_id, shape_name, mesh, overrides=overrides)
+
+    class _C:  # tiny shim for roofline_terms
+        wire_bytes = m["wire"]
+        counts = m["counts"]
+
+        @property
+        def total_bytes(self):
+            return m["coll_bytes"]
+
+    rl = roofline_terms(m["flops"], m["bytes"], _C(), n,
+                        model_flops=m["model_flops"])
+    rl.pop("wire_bytes", None)
+    rec = dict(arch=arch_id, shape=shape_name, num_devices=int(n),
+               hlo_flops=m["flops"], hlo_bytes=m["bytes"],
+               wire_bytes=m["wire"], elapsed_s=round(time.time() - t0, 1),
+               **{k: v for k, v in rl.items()})
+    if "fit_points" in m:
+        rec["fit_points"] = m["fit_points"]
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+    cells = ([(args.arch, args.shape)] if args.arch else
+             [(a, c.name) for a, c, _ in all_cells()])
+    for arch_id, shape_name in cells:
+        try:
+            rec = analyse(arch_id, shape_name)
+            path = os.path.join(args.out, f"{arch_id}__{shape_name}.json")
+            with open(path, "w") as f:
+                json.dump(rec, f, indent=1, default=str)
+            print(f"{arch_id:22s} {shape_name:14s} dom={rec['dominant']:10s} "
+                  f"T_c={rec['t_compute']:.3e} T_m={rec['t_memory']:.3e} "
+                  f"T_x={rec['t_collective']:.3e} "
+                  f"roofline={rec.get('roofline_fraction', 0):.3f}")
+        except Exception as e:
+            print(f"{arch_id:22s} {shape_name:14s} FAILED: {e}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Benchmark harness: one function per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig6]``
+prints ``name,us_per_call,derived`` CSV rows.
+
+The roofline sweep (§Roofline) is separate — it needs 512 fake devices:
+``PYTHONPATH=src python -m benchmarks.roofline``.
+"""
+import argparse
+import sys
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="substring filter on benchmark fn names")
+    args = ap.parse_args()
+    from . import paper_figs
+    print("name,us_per_call,derived")
+    t0 = time.time()
+    for fn in paper_figs.ALL:
+        if args.only and args.only not in fn.__name__:
+            continue
+        print(f"# --- {fn.__name__}: {fn.__doc__.splitlines()[0]}",
+              file=sys.stderr)
+        fn()
+    print(f"# total {time.time() - t0:.1f}s", file=sys.stderr)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,52 @@
+"""Train GAT on a cora-like graph with the TOCAB aggregation backend, then
+A/B the aggregation backends (flat segment-sum vs cache-blocked TOCAB).
+
+    PYTHONPATH=src python examples/gnn_cora.py
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import build_blocked, from_edges
+from repro.data.graphs import cora_like
+from repro.models.gnn import GNNConfig, gnn_forward, gnn_loss_fn, init_gnn
+from repro.train.optim import adamw, apply_updates, constant_schedule
+
+
+def main():
+    g, batch = cora_like(n=2708, m=10556, d_feat=256, n_classes=7, seed=0)
+    print(f"graph: |V|={g.n} |E|={g.m}")
+    # TOCAB-blocked layout for the aggregation backend
+    src, dst = g.edges()
+    bg = build_blocked(g, block_size=512)
+    print(f"TOCAB: {bg.num_blocks} subgraphs")
+
+    cfg = GNNConfig(arch="gat", n_layers=2, d_in=256, d_hidden=8,
+                    n_classes=7, n_heads=8)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    opt = adamw(constant_schedule(5e-3))
+    state = opt.init(params)
+
+    @jax.jit
+    def step(params, state):
+        (loss, m), grads = jax.value_and_grad(
+            lambda p: gnn_loss_fn(p, batch, cfg, bg=bg), has_aux=True)(params)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss, m["acc"]
+
+    for i in range(101):
+        params, state, loss, acc = step(params, state)
+        if i % 20 == 0:
+            print(f"step {i:3d} loss={float(loss):.4f} acc={float(acc):.3f}")
+
+    # backend A/B: same params, both aggregation paths
+    out_flat = gnn_forward(params, batch, cfg, bg=None)
+    out_toc = gnn_forward(params, batch, cfg, bg=bg)
+    print(f"agg backends max |Δ| = {float(jnp.abs(out_flat-out_toc).max()):.2e}"
+          " (TOCAB ≡ flat)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Serve a BERT4Rec model with batched requests: train briefly, then run
+online scoring (top-k over the catalogue) and candidate retrieval.
+
+    PYTHONPATH=src python examples/serve_recsys.py
+"""
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+from repro.data.recsys import synthetic_recsys_batches
+from repro.models.bert4rec import (
+    bert4rec_loss_fn, bert4rec_retrieve, bert4rec_score, init_bert4rec,
+)
+from repro.train.optim import adamw, apply_updates, constant_schedule
+
+
+def main():
+    cfg = dataclasses.replace(get_arch("bert4rec").make_smoke_cfg(),
+                              vocab=5000, max_len=50)
+    params = init_bert4rec(cfg, jax.random.PRNGKey(0))
+    opt = adamw(constant_schedule(1e-3))
+    state = opt.init(params)
+    gen = synthetic_recsys_batches(32, cfg.max_len, cfg.vocab, cfg.mask_id)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: bert4rec_loss_fn(p, batch, cfg), has_aux=True)(params)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss
+
+    print("training…")
+    for i in range(120):
+        params, state, loss = step(params, state, next(gen))
+        if i % 30 == 0:
+            print(f"  step {i:3d} ce={float(loss):.4f}")
+
+    # --- batched online serving (serve_p99-style) ---
+    serve = jax.jit(lambda p, items: bert4rec_score(p, items, cfg, top_k=10))
+    batch = next(gen)["items"]
+    vals, idx = serve(params, batch)  # warmup/compile
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        vals, idx = serve(params, batch)
+        jax.block_until_ready(vals)
+    dt = (time.perf_counter() - t0) / reps
+    print(f"\nonline scoring: batch={batch.shape[0]} → top-10 of "
+          f"{cfg.vocab} items in {dt*1e3:.1f} ms/batch")
+    print(f"  sample recs for user 0: {np.asarray(idx[0])}")
+
+    # --- retrieval against a candidate set (retrieval_cand-style) ---
+    cands = jnp.asarray(np.random.default_rng(0).choice(
+        cfg.vocab, 2000, replace=False).astype(np.int32))
+    rv, ri = bert4rec_retrieve(params, batch[:1], cands, cfg, top_k=5)
+    print(f"retrieval: top-5 of {len(cands)} candidates → ids "
+          f"{np.asarray(ri)} (scores {np.round(np.asarray(rv), 2)})")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Architecture registry: ``get_arch(id)`` + per-arch config modules.
+
+Ten assigned architectures (``--arch <id>``):
+  LM:     granite-moe-3b-a800m, mixtral-8x22b, tinyllama-1.1b,
+          gemma-7b, gemma2-27b
+  GNN:    gat-cora, gin-tu, dimenet, graphsage-reddit
+  RecSys: bert4rec
+plus the paper's own graph-algorithm suite config (``graphcage``).
+"""
+from .base import ArchSpec, ShapeCell, LM_SHAPES, GNN_SHAPES, RECSYS_SHAPES  # noqa: F401
+from .lm_archs import LM_ARCHS
+from .gnn_archs import GNN_ARCHS, RECSYS_ARCHS
+
+ARCHS: dict[str, ArchSpec] = {**LM_ARCHS, **GNN_ARCHS, **RECSYS_ARCHS}
+
+
+def get_arch(arch_id: str) -> ArchSpec:
+    if arch_id not in ARCHS:
+        raise KeyError(f"unknown arch {arch_id!r}; available: {sorted(ARCHS)}")
+    return ARCHS[arch_id]
+
+
+def all_cells(include_skipped: bool = False):
+    """Every (arch × shape) cell; skipped cells flagged."""
+    for arch_id, spec in ARCHS.items():
+        for cell in spec.shapes:
+            skipped = cell.name in spec.skip_shapes
+            if skipped and not include_skipped:
+                continue
+            yield arch_id, cell, skipped

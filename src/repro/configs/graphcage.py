@@ -1,0 +1,30 @@
+"""The paper's own configuration: the GraphCage graph-algorithm suite.
+
+Mirrors the evaluation setup of the paper (§4): PR / SpMV / BC over a suite
+of scale-free graphs, TOCAB block size as the tunable (Fig. 11), plus the
+cache-model parameters of the GTX 1080Ti the paper measured on.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCageCfg:
+    # graph suite (scaled-down, same generator family as Kron21/Twitter)
+    scales: tuple = (14, 15, 16)
+    edge_factor: int = 8
+    # TOCAB
+    block_size: int = 8192  # vertices per subgraph (Fig. 11 sweep default)
+    fast_mem_bytes: int = 4 * 1024 * 1024  # TPU VMEM budget for the window
+    # paper GPU cache model (Fig. 9/10)
+    llc_bytes: int = int(2.75 * 1024 * 1024)
+    line_bytes: int = 128
+    ways: int = 16
+    # algorithms
+    pr_damping: float = 0.85
+    pr_tol: float = 1e-6
+    bfs_alpha: float = 15.0
+
+
+DEFAULT = GraphCageCfg()

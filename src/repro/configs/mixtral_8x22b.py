@@ -1,0 +1,8 @@
+"""Config for ``--arch mixtral-8x22b`` (see lm_archs.py for the spec)."""
+from . import get_arch
+
+ARCH_ID = "mixtral-8x22b"
+SPEC = get_arch(ARCH_ID)
+make_model_cfg = SPEC.make_model_cfg
+make_smoke_cfg = SPEC.make_smoke_cfg
+SHAPES = SPEC.shapes

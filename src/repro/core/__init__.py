@@ -1,0 +1,37 @@
+"""GraphCage core: TOCAB cache-aware graph processing (the paper's contribution).
+
+Public surface:
+
+* :mod:`repro.core.graph` — CSR graph containers + generators
+* :mod:`repro.core.partition` — TOCAB static 1D blocking + local-ID compaction
+* :mod:`repro.core.tocab` — blocked pull/push engines + reduction phase
+* :mod:`repro.core.pagerank` / :mod:`repro.core.spmv` /
+  :mod:`repro.core.traversal` — the paper's benchmark algorithms
+* :mod:`repro.core.cache_model` — analytic LLC model (Fig. 9/10 repro)
+"""
+from .graph import (  # noqa: F401
+    DeviceGraph,
+    Graph,
+    from_edges,
+    grid_graph,
+    rmat_graph,
+    to_networkx,
+    uniform_random_graph,
+)
+from .partition import BlockedGraph, build_blocked, choose_block_size  # noqa: F401
+from .tocab import (  # noqa: F401
+    baseline_pull,
+    baseline_push,
+    cb_pull,
+    reduce_partials,
+    segment_reduce,
+    tocab_pull,
+    tocab_pull_partials,
+    tocab_push,
+)
+from .pagerank import PR_VARIANTS, pagerank, pagerank_iteration  # noqa: F401
+from .spmv import SPMV_VARIANTS, spmv  # noqa: F401
+from .traversal import (  # noqa: F401
+    INF_DEPTH, bc, bfs, connected_components, sssp,
+)
+from .cache_model import CacheConfig, CacheSim, simulate_pagerank_variant  # noqa: F401

@@ -1,0 +1,129 @@
+"""Design-choice ablations from paper §3.1 — the alternatives GraphCage
+argues AGAINST, implemented so the argument is measurable:
+
+* **2D blocking** (§3.1 choice 2): partition on BOTH source and destination
+  ranges.  More, smaller blocks → fewer reuses captured per block + more
+  merge overhead.  ``build_blocked_2d`` + ``tocab_pull_2d``.
+* **Dynamic blocking / propagation blocking** (§3.1 choice 3, Beamer's PB):
+  no preprocessing — per-iteration runtime binning of (dst, contribution)
+  pairs into cache-sized buckets, then bucket-sequential accumulation.
+  Costs extra stores+loads for the intermediate buffers every iteration
+  (the paper's argument for static blocking).  ``propagation_blocking_pull``.
+
+Both are numerically identical to the flat baseline (tested) and are
+benchmarked against TOCAB in ``benchmarks/paper_figs.py::ablation_blocking``.
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .graph import DeviceGraph, Graph
+from .partition import REDUCE_IDENTITY, BlockedGraph, build_blocked
+
+__all__ = ["build_blocked_2d", "tocab_pull_2d", "propagation_blocking_pull",
+           "Blocked2D"]
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class Blocked2D:
+    """2D-blocked edges: tile (bi, bj) holds edges with src∈range(bi),
+    dst∈range(bj).  Stored as a flat (num_tiles, edge_budget) slab grid."""
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    m: int = dataclasses.field(metadata=dict(static=True))
+    block_size: int = dataclasses.field(metadata=dict(static=True))
+    tiles_per_side: int = dataclasses.field(metadata=dict(static=True))
+    edge_budget: int = dataclasses.field(metadata=dict(static=True))
+    src_rel: jnp.ndarray  # int32[T, eb] src − src_block_lo
+    dst_rel: jnp.ndarray  # int32[T, eb] dst − dst_block_lo
+    edge_mask: jnp.ndarray  # bool[T, eb]
+    edge_vals: Optional[jnp.ndarray] = None
+
+
+def build_blocked_2d(g: Graph, block_size: int,
+                     pad_edges_to: int = 128) -> Blocked2D:
+    src, dst = g.edges()
+    nb = max(1, -(-g.n // block_size))
+    tile = (src // block_size) * nb + (dst // block_size)
+    order = np.argsort(tile, kind="stable")
+    tile, src, dst = tile[order], src[order], dst[order]
+    vals = None if g.vals is None else g.vals[order]
+    T = nb * nb
+    counts = np.bincount(tile, minlength=T)
+    eb = max(pad_edges_to, -(-int(counts.max(initial=1)) // pad_edges_to)
+             * pad_edges_to)
+    first = np.concatenate([[0], np.cumsum(counts)])[:-1]
+    slot = np.arange(len(src)) - np.repeat(first, counts)
+    src_rel = np.zeros((T, eb), np.int32)
+    dst_rel = np.zeros((T, eb), np.int32)
+    mask = np.zeros((T, eb), bool)
+    ev = None if vals is None else np.zeros((T, eb), np.float32)
+    bi = tile // nb
+    bj = tile % nb
+    src_rel[tile, slot] = (src - bi * block_size).astype(np.int32)
+    dst_rel[tile, slot] = (dst - bj * block_size).astype(np.int32)
+    mask[tile, slot] = True
+    if ev is not None:
+        ev[tile, slot] = vals
+    return Blocked2D(
+        n=g.n, m=g.m, block_size=block_size, tiles_per_side=nb,
+        edge_budget=eb, src_rel=jnp.asarray(src_rel),
+        dst_rel=jnp.asarray(dst_rel), edge_mask=jnp.asarray(mask),
+        edge_vals=None if ev is None else jnp.asarray(ev))
+
+
+@partial(jax.jit, static_argnames=("reduce",))
+def tocab_pull_2d(bg: Blocked2D, values: jnp.ndarray, reduce: str = "sum"):
+    """2D-blocked pull: per tile, gather from the source window and reduce
+    into a dense per-tile destination slab; merge tiles per dst block."""
+    nb, B = bg.tiles_per_side, bg.block_size
+    bi = (jnp.arange(nb * nb, dtype=jnp.int32) // nb)[:, None]
+    src_global = bg.src_rel + bi * B
+    msgs = jnp.take(values, src_global, axis=0, mode="fill", fill_value=0)
+    if bg.edge_vals is not None:
+        msgs = msgs * bg.edge_vals
+    ident = jnp.asarray(REDUCE_IDENTITY[reduce], msgs.dtype)
+    msgs = jnp.where(bg.edge_mask, msgs, ident)
+    # per-tile dense partials over the destination window
+    flat_idx = (bg.dst_rel
+                + jnp.arange(nb * nb, dtype=jnp.int32)[:, None] * B)
+    from .tocab import segment_reduce
+    partials = segment_reduce(msgs.reshape(-1), flat_idx.reshape(-1),
+                              nb * nb * B, reduce)
+    # merge: tiles (bi, bj) reduce over bi into dst block bj
+    partials = partials.reshape(nb, nb, B)
+    if reduce == "sum":
+        out = partials.sum(axis=0)
+    elif reduce == "min":
+        out = partials.min(axis=0)
+    else:
+        out = partials.max(axis=0)
+    return out.reshape(nb * B)[: bg.n]
+
+
+@partial(jax.jit, static_argnames=("num_bins", "reduce"))
+def propagation_blocking_pull(dg: DeviceGraph, values: jnp.ndarray,
+                              num_bins: int = 16, reduce: str = "sum"):
+    """Dynamic blocking (Beamer's propagation blocking, §3.1/§5):
+
+    Phase 1 (binning): compute per-edge (dst, contribution) pairs and sort
+    them by destination *bin* at runtime — this materializes the full
+    intermediate stream (the extra loads/stores the paper charges against
+    dynamic schemes; visible in the cost analysis + wallclock).
+    Phase 2 (accumulate): bucket-sequential segment reduce."""
+    msgs = jnp.take(values, dg.src, axis=0, mode="fill", fill_value=0)
+    if dg.vals is not None:
+        msgs = msgs * dg.vals
+    bin_size = -(-dg.n // num_bins)
+    order = jnp.argsort(dg.dst // bin_size)  # runtime binning pass
+    binned_dst = dg.dst[order]  # intermediate buffer #1
+    binned_msgs = msgs[order]  # intermediate buffer #2
+    from .tocab import segment_reduce
+    return segment_reduce(binned_msgs, binned_dst, dg.n, reduce)

@@ -1,0 +1,203 @@
+"""CSR graph container and builders.
+
+The host-side ``Graph`` (numpy) is the preprocessing-time representation: TOCAB
+is a *static* blocking scheme, so partitioning happens on the host before any
+device computation, exactly as in the paper.  ``DeviceGraph`` is the flat
+edge-centric (COO + CSR) representation shipped to the device for the
+*baseline* (non-blocked) engines; the blocked representation lives in
+:mod:`repro.core.partition`.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "Graph",
+    "DeviceGraph",
+    "from_edges",
+    "rmat_graph",
+    "uniform_random_graph",
+    "grid_graph",
+    "to_networkx",
+]
+
+
+@dataclasses.dataclass(frozen=True)
+class Graph:
+    """Host-side CSR graph (out-edges).  ``vals`` optional per-edge weights."""
+
+    n: int
+    rowptr: np.ndarray  # int64[n+1]
+    colidx: np.ndarray  # int32[m]
+    vals: Optional[np.ndarray] = None  # float32[m]
+
+    @property
+    def m(self) -> int:
+        return int(self.colidx.shape[0])
+
+    @property
+    def out_degree(self) -> np.ndarray:
+        return np.diff(self.rowptr).astype(np.int32)
+
+    @property
+    def in_degree(self) -> np.ndarray:
+        return np.bincount(self.colidx, minlength=self.n).astype(np.int32)
+
+    def edges(self) -> tuple[np.ndarray, np.ndarray]:
+        """COO view: (src, dst) arrays, src-sorted."""
+        src = np.repeat(np.arange(self.n, dtype=np.int32), self.out_degree)
+        return src, self.colidx.astype(np.int32)
+
+    def transpose(self) -> "Graph":
+        """Gᵀ — used to derive pull (in-edge) iteration and push blocking."""
+        src, dst = self.edges()
+        return from_edges(self.n, dst, src, vals=self.vals)
+
+    def average_degree(self) -> float:
+        return self.m / max(self.n, 1)
+
+    def degree_histogram(self, bounds=(8, 16, 32)) -> dict:
+        """Degree distribution buckets — reproduces paper Table 1."""
+        deg = self.out_degree
+        hist, lo = {}, 0
+        for b in bounds:
+            hist[f"{lo}~{b - 1}"] = float(np.mean((deg >= lo) & (deg < b)))
+            lo = b
+        hist[f"{lo}~"] = float(np.mean(deg >= lo))
+        return hist
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass(frozen=True)
+class DeviceGraph:
+    """Flat edge-centric device representation for the baseline engines."""
+
+    n: int = dataclasses.field(metadata=dict(static=True))
+    src: jnp.ndarray  # int32[m]  (src-sorted)
+    dst: jnp.ndarray  # int32[m]
+    rowptr: jnp.ndarray  # int32[n+1]
+    out_degree: jnp.ndarray  # int32[n]
+    in_degree: jnp.ndarray  # int32[n]
+    vals: Optional[jnp.ndarray] = None
+
+    @property
+    def m(self) -> int:
+        return int(self.src.shape[0])
+
+    @classmethod
+    def from_host(cls, g: Graph) -> "DeviceGraph":
+        src, dst = g.edges()
+        return cls(
+            n=g.n,
+            src=jnp.asarray(src, jnp.int32),
+            dst=jnp.asarray(dst, jnp.int32),
+            rowptr=jnp.asarray(g.rowptr, jnp.int32),
+            out_degree=jnp.asarray(g.out_degree, jnp.int32),
+            in_degree=jnp.asarray(g.in_degree, jnp.int32),
+            vals=None if g.vals is None else jnp.asarray(g.vals, jnp.float32),
+        )
+
+
+def from_edges(
+    n: int,
+    src: np.ndarray,
+    dst: np.ndarray,
+    vals: Optional[np.ndarray] = None,
+    dedup: bool = False,
+) -> Graph:
+    """Build a CSR :class:`Graph` from COO edges."""
+    src = np.asarray(src, dtype=np.int64)
+    dst = np.asarray(dst, dtype=np.int64)
+    if src.size:
+        assert src.min() >= 0 and src.max() < n, "src out of range"
+        assert dst.min() >= 0 and dst.max() < n, "dst out of range"
+    if dedup and src.size:
+        key = src * n + dst
+        _, idx = np.unique(key, return_index=True)
+        src, dst = src[idx], dst[idx]
+        vals = None if vals is None else np.asarray(vals)[idx]
+    order = np.argsort(src, kind="stable")
+    src, dst = src[order], dst[order]
+    if vals is not None:
+        vals = np.asarray(vals, dtype=np.float32)[order]
+    rowptr = np.zeros(n + 1, dtype=np.int64)
+    np.add.at(rowptr, src + 1, 1)
+    rowptr = np.cumsum(rowptr)
+    return Graph(n=n, rowptr=rowptr, colidx=dst.astype(np.int32), vals=vals)
+
+
+def rmat_graph(
+    scale: int,
+    edge_factor: int = 16,
+    a: float = 0.57,
+    b: float = 0.19,
+    c: float = 0.19,
+    seed: int = 0,
+    undirected: bool = False,
+    weights: bool = False,
+) -> Graph:
+    """R-MAT/Kronecker power-law generator (Graph500-style) — scale-free graphs
+    like the paper's Kron21/Twitter suite."""
+    rng = np.random.default_rng(seed)
+    n = 1 << scale
+    m = n * edge_factor
+    src = np.zeros(m, dtype=np.int64)
+    dst = np.zeros(m, dtype=np.int64)
+    for lvl in range(scale):
+        r = rng.random(m)
+        # quadrant probabilities (a, b, c, d)
+        go_right = r >= a + c  # dst high bit
+        go_down = ((r >= a) & (r < a + c)) | (r >= a + b + c)  # src high bit
+        src |= go_down.astype(np.int64) << lvl
+        dst |= go_right.astype(np.int64) << lvl
+    # permute vertex ids to kill the locality R-MAT bakes in (paper targets
+    # graphs with *poor* layouts)
+    perm = rng.permutation(n)
+    src, dst = perm[src], perm[dst]
+    keep = src != dst
+    src, dst = src[keep], dst[keep]
+    if undirected:
+        src, dst = np.concatenate([src, dst]), np.concatenate([dst, src])
+    vals = rng.random(src.shape[0], dtype=np.float32) if weights else None
+    return from_edges(n, src, dst, vals=vals, dedup=True)
+
+
+def uniform_random_graph(
+    n: int, m: int, seed: int = 0, weights: bool = False
+) -> Graph:
+    """Erdős–Rényi-ish uniform random digraph."""
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    vals = rng.random(int(keep.sum()), dtype=np.float32) if weights else None
+    return from_edges(n, src[keep], dst[keep], vals=vals, dedup=True)
+
+
+def grid_graph(rows: int, cols: int) -> Graph:
+    """2D grid digraph (right+down edges) — a *good-locality* graph, the
+    Hollywood-analogue control for the paper's claim that GraphCage causes
+    only trivial slowdown on graphs that already have good layouts."""
+    n = rows * cols
+    ids = np.arange(n).reshape(rows, cols)
+    src = np.concatenate([ids[:, :-1].ravel(), ids[:-1, :].ravel()])
+    dst = np.concatenate([ids[:, 1:].ravel(), ids[1:, :].ravel()])
+    return from_edges(n, src, dst)
+
+
+def to_networkx(g: Graph):
+    import networkx as nx
+
+    G = nx.DiGraph()
+    G.add_nodes_from(range(g.n))
+    src, dst = g.edges()
+    if g.vals is not None:
+        G.add_weighted_edges_from(zip(src.tolist(), dst.tolist(), g.vals.tolist()))
+    else:
+        G.add_edges_from(zip(src.tolist(), dst.tolist()))
+    return G

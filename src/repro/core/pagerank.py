@@ -1,0 +1,98 @@
+"""PageRank in all of the paper's configurations (Fig. 6).
+
+Variants (names follow the paper's evaluation bars):
+
+* ``base``      — flat pull, no optimization (Alg. 1)
+* ``push``      — flat push (Alg. 2; no atomics on TPU → segment reduce)
+* ``cb``        — conventional cache blocking (blocked, no compaction)
+* ``gc-pull``   — GraphCage TOCAB pull (Alg. 4 + reduction phase)
+* ``gc-push``   — GraphCage TOCAB push (Alg. 5)
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .graph import DeviceGraph
+from .partition import BlockedGraph
+from . import tocab
+
+__all__ = ["pagerank", "pagerank_iteration", "PR_VARIANTS"]
+
+PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
+
+
+def _unweighted(msgs, edge_vals):
+    """PR is unweighted: ignore any edge values the graph carries."""
+    return msgs
+
+
+def _gather_sums(variant: str, dg, bg, contributions):
+    kw = dict(reduce="sum", combine=_unweighted)
+    if variant == "base":
+        return tocab.baseline_pull(dg, contributions, **kw)
+    if variant == "push":
+        return tocab.baseline_push(dg, contributions, **kw)
+    if variant == "cb":
+        return tocab.cb_pull(bg, contributions, **kw)
+    if variant == "gc-pull":
+        return tocab.tocab_pull(bg, contributions, **kw)
+    if variant == "gc-push":
+        return tocab.tocab_push(bg, contributions, **kw)
+    raise ValueError(f"unknown PR variant {variant!r}")
+
+
+def pagerank_iteration(
+    variant: str,
+    dg: DeviceGraph,
+    bg: Optional[BlockedGraph],
+    rank: jnp.ndarray,
+    out_degree: jnp.ndarray,
+    damping: float = 0.85,
+    handle_dangling: bool = True,
+):
+    """One PR iteration: contributions → gather/scatter → apply."""
+    n = rank.shape[0]
+    safe_deg = jnp.maximum(out_degree, 1).astype(rank.dtype)
+    contributions = rank / safe_deg
+    contributions = jnp.where(out_degree > 0, contributions, 0.0)
+    sums = _gather_sums(variant, dg, bg, contributions)
+    dangling = jnp.where(out_degree > 0, 0.0, rank).sum() if handle_dangling else 0.0
+    return (1.0 - damping) / n + damping * (sums + dangling / n)
+
+
+@partial(
+    jax.jit,
+    static_argnames=("variant", "damping", "tol", "max_iters", "handle_dangling"),
+)
+def pagerank(
+    dg: DeviceGraph,
+    bg: Optional[BlockedGraph] = None,
+    variant: str = "gc-pull",
+    damping: float = 0.85,
+    tol: float = 1e-6,
+    max_iters: int = 200,
+    handle_dangling: bool = True,
+):
+    """Iterate PR until the L1 delta falls below ``tol``.
+
+    Returns (rank, iterations)."""
+    n = dg.n
+    rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
+
+    def cond(state):
+        _, delta, it = state
+        return (delta > tol) & (it < max_iters)
+
+    def body(state):
+        rank, _, it = state
+        new_rank = pagerank_iteration(
+            variant, dg, bg, rank, dg.out_degree, damping, handle_dangling
+        )
+        return new_rank, jnp.abs(new_rank - rank).sum(), it + 1
+
+    rank, _, iters = jax.lax.while_loop(cond, body, (rank0, jnp.inf, 0))
+    return rank, iters

@@ -1,0 +1,44 @@
+"""SpMV (paper Fig. 7): y = A·x over the graph's weighted adjacency.
+
+Most vertex programs are generalized SpMV (paper cites GraphMat) — this module
+is both a benchmark and the oracle for the Pallas ``tocab_spmm`` kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .graph import DeviceGraph
+from .partition import BlockedGraph
+from . import tocab
+
+__all__ = ["spmv", "SPMV_VARIANTS"]
+
+SPMV_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
+
+
+@partial(jax.jit, static_argnames=("variant",))
+def spmv(
+    dg: DeviceGraph,
+    bg: Optional[BlockedGraph],
+    x: jnp.ndarray,
+    variant: str = "gc-pull",
+):
+    """y[dst] = Σ_{(src,dst)} A[src,dst]·x[src].
+
+    ``x`` may be a vector (n,) — SpMV — or a matrix (n, d) — SpMM, which is
+    the GNN aggregation primitive."""
+    if variant == "base":
+        return tocab.baseline_pull(dg, x, reduce="sum")
+    if variant == "push":
+        return tocab.baseline_push(dg, x, reduce="sum")
+    if variant == "cb":
+        return tocab.cb_pull(bg, x, reduce="sum")
+    if variant == "gc-pull":
+        return tocab.tocab_pull(bg, x, reduce="sum")
+    if variant == "gc-push":
+        return tocab.tocab_push(bg, x, reduce="sum")
+    raise ValueError(f"unknown SpMV variant {variant!r}")

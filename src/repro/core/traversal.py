@@ -1,0 +1,236 @@
+"""Traversal-based algorithms: BFS, Betweenness Centrality, SSSP (paper §3.3).
+
+Partial-active algorithms keep a changing frontier.  Per the paper, the
+GPU/TPU-friendly representation is the **status array** (topology-driven):
+dynamic frontier queues are not expressible with static shapes anyway, and the
+paper argues status arrays let the per-subgraph ``next`` frontier ride the
+same partial-slab + reduction machinery as ``partial_sums``.
+
+Direction optimization (Beamer): iterations with a sparse frontier run in
+**push**; dense-frontier iterations run in **pull** — and only the pull
+iterations go through TOCAB (the working set only exceeds fast memory when
+the frontier is large).  The hybrid switch uses the classic α heuristic on
+the frontier's out-edge count.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from .graph import DeviceGraph
+from .partition import BlockedGraph
+from . import tocab
+
+__all__ = ["bfs", "bc", "sssp", "connected_components", "INF_DEPTH"]
+
+INF_DEPTH = jnp.iinfo(jnp.int32).max // 2
+
+
+def _frontier_reach(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    frontier_f32: jnp.ndarray,
+    use_pull: jnp.ndarray,
+):
+    """reached[dst] = max over in-edges of frontier[src]  (0/1 floats).
+
+    ``use_pull`` selects TOCAB pull (dense phase) vs flat push (sparse
+    phase).  Both are lowered; `lax.cond` picks at runtime — on TPU the
+    pull branch is the blocked kernel, the push branch the flat one."""
+
+    def pull_branch(f):
+        if bg_pull is None:
+            return tocab.baseline_pull(dg, f, reduce="max")
+        return tocab.tocab_pull(bg_pull, f, reduce="max")
+
+    def push_branch(f):
+        return tocab.baseline_push(dg, f, reduce="max")
+
+    return jax.lax.cond(use_pull, pull_branch, push_branch, frontier_f32)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "alpha"))
+def bfs(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_iters: int = 0,
+    alpha: float = 15.0,
+):
+    """Direction-optimizing BFS.  ``dg``/``bg_pull`` are over Gᵀ edges
+    oriented (src→dst) = (in-neighbour → vertex), i.e. the pull layout.
+
+    Returns (depth int32[n], levels int32, push_iters, pull_iters)."""
+    n = dg.n
+    max_iters = max_iters or n
+    depth0 = jnp.full((n,), INF_DEPTH, jnp.int32).at[source].set(0)
+    frontier0 = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+
+    def cond(state):
+        _, frontier, level, pp = state
+        return (frontier.sum() > 0) & (level < max_iters)
+
+    def body(state):
+        depth, frontier, level, (n_push, n_pull) = state
+        # Beamer heuristic: frontier out-edge volume vs m/alpha.
+        m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
+        use_pull = m_frontier > (dg.m / alpha)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
+        new_frontier = (reached > 0) & (depth >= INF_DEPTH)
+        depth = jnp.where(new_frontier, level + 1, depth)
+        counts = (
+            n_push + jnp.where(use_pull, 0, 1),
+            n_pull + jnp.where(use_pull, 1, 0),
+        )
+        return depth, new_frontier.astype(jnp.float32), level + 1, counts
+
+    depth, _, levels, (n_push, n_pull) = jax.lax.while_loop(
+        cond, body, (depth0, frontier0, jnp.int32(0), (jnp.int32(0), jnp.int32(0)))
+    )
+    return depth, levels, n_push, n_pull
+
+
+@partial(jax.jit, static_argnames=("max_levels", "alpha"))
+def bc(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_levels: int = 64,
+    alpha: float = 15.0,
+):
+    """Brandes betweenness centrality from one source (paper Alg. 3 + the
+    standard dependency back-propagation).  Forward phase = BFS computing
+    depth δ and shortest-path counts σ; backward phase accumulates
+    dependencies level by level.
+
+    Returns (bc_scores f32[n], depth, sigma)."""
+    n = dg.n
+    depth0 = jnp.full((n,), INF_DEPTH, jnp.int32).at[source].set(0)
+    sigma0 = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+    frontier0 = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
+
+    # ---------------- forward: depth + sigma ---------------- #
+    def fwd_cond(state):
+        _, _, frontier, level = state
+        return (frontier.sum() > 0) & (level < max_levels)
+
+    def fwd_body(state):
+        depth, sigma, frontier, level = state
+        m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
+        use_pull = m_frontier > (dg.m / alpha)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
+        new_frontier = (reached > 0) & (depth >= INF_DEPTH)
+        depth = jnp.where(new_frontier, level + 1, depth)
+        # σ[dst] += Σ σ[src] over tree edges (src on frontier level).
+        path_msgs = jnp.where(frontier > 0, sigma, 0.0)
+        sig_in = (
+            tocab.tocab_pull(bg_pull, path_msgs, reduce="sum")
+            if bg_pull is not None
+            else tocab.baseline_pull(dg, path_msgs, reduce="sum")
+        )
+        sigma = jnp.where(new_frontier, sig_in, sigma)
+        return depth, sigma, new_frontier.astype(jnp.float32), level + 1
+
+    depth, sigma, _, levels = jax.lax.while_loop(
+        fwd_cond, fwd_body, (depth0, sigma0, frontier0, jnp.int32(0))
+    )
+
+    # ---------------- backward: dependency accumulation ---------------- #
+    # δ(v) = Σ_{w: (v,w) tree edge} σ(v)/σ(w) · (1 + δ(w)); iterate levels
+    # from deepest-1 down to 0.  Pull over G (v gathers from out-neighbours
+    # w) — which is a pull over Gᵀ's reversed edges = push layout of dg;
+    # we simply reuse dg with roles flipped (dst→src).
+    safe_sigma = jnp.maximum(sigma, 1e-30)
+
+    def bwd_body(i, delta):
+        level = levels - 1 - i  # deepest-1 ... 0
+        coef = jnp.where(depth < INF_DEPTH, (1.0 + delta) / safe_sigma, 0.0)
+        # message flows w → v along edge (v,w): gather at the *src* side of
+        # each edge from its dst side (push layout; flat per the paper —
+        # backward frontiers are level-sparse).
+        msgs = coef[dg.dst] * jnp.where(depth[dg.dst] == level + 1, 1.0, 0.0)
+        acc = tocab.segment_reduce(msgs, dg.src, n, "sum")
+        contrib = sigma * acc
+        delta = jnp.where(depth == level, delta + contrib, delta)
+        return delta
+
+    delta = jax.lax.fori_loop(0, levels, bwd_body, jnp.zeros((n,), jnp.float32))
+    bc_scores = jnp.where(depth < INF_DEPTH, delta, 0.0).at[source].set(0.0)
+    return bc_scores, depth, sigma
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def sssp(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_iters: int = 0,
+):
+    """Bellman-Ford SSSP (min-plus semiring), TOCAB pull per iteration.
+
+    ``dg`` must carry edge weights.  Returns (dist f32[n], iters)."""
+    n = dg.n
+    max_iters = max_iters or n
+    inf = jnp.float32(jnp.inf)
+    dist0 = jnp.full((n,), inf).at[source].set(0.0)
+    plus = lambda d, w: d + (w if w is not None else 1.0)
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        dist, _, it = state
+        relaxed = (
+            tocab.tocab_pull(bg_pull, dist, reduce="min", combine=plus)
+            if bg_pull is not None
+            else tocab.baseline_pull(dg, dist, reduce="min", combine=plus)
+        )
+        new_dist = jnp.minimum(dist, relaxed)
+        return new_dist, jnp.any(new_dist < dist), it + 1
+
+    dist, _, iters = jax.lax.while_loop(cond, body, (dist0, jnp.bool_(True), 0))
+    return dist, iters
+
+
+@partial(jax.jit, static_argnames=("max_iters",))
+def connected_components(
+    dg: DeviceGraph,
+    dg_t: DeviceGraph,
+    bg_pull: Optional[BlockedGraph] = None,
+    max_iters: int = 0,
+):
+    """Weakly-connected components via min-label propagation (all-active,
+    min semiring — the same blocked pull engine as SSSP).
+
+    ``dg_t`` is the transpose edge set (labels must flow both directions
+    for *weak* connectivity).  Returns (labels int32[n], iters)."""
+    n = dg.n
+    max_iters = max_iters or n
+    labels0 = jnp.arange(n, dtype=jnp.float32)
+    ignore = lambda m, w: m  # unweighted
+
+    def relax(labels):
+        fwd = (
+            tocab.tocab_pull(bg_pull, labels, reduce="min", combine=ignore)
+            if bg_pull is not None
+            else tocab.baseline_pull(dg, labels, reduce="min", combine=ignore)
+        )
+        bwd = tocab.baseline_pull(dg_t, labels, reduce="min", combine=ignore)
+        return jnp.minimum(labels, jnp.minimum(fwd, bwd))
+
+    def cond(state):
+        _, changed, it = state
+        return changed & (it < max_iters)
+
+    def body(state):
+        labels, _, it = state
+        new = relax(labels)
+        return new, jnp.any(new < labels), it + 1
+
+    labels, _, iters = jax.lax.while_loop(
+        cond, body, (labels0, jnp.bool_(True), 0))
+    return labels.astype(jnp.int32), iters

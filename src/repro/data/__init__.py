@@ -1,0 +1,4 @@
+from .tokens import synthetic_lm_batches  # noqa: F401
+from .graphs import cora_like, products_like, reddit_like, molecule_batch  # noqa: F401
+from .sampler import NeighborSampler  # noqa: F401
+from .recsys import synthetic_recsys_batches  # noqa: F401

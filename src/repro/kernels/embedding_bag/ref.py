@@ -1,0 +1,25 @@
+"""Pure-jnp EmbeddingBag oracle (gather + weighted reduce).
+
+Also the differentiable path used during training — XLA turns the gather's
+VJP into a scatter-add, whose blocked/accumulated variant is exactly the
+paper's push-mode TOCAB (see repro.models.bert4rec).
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["embedding_bag_ref"]
+
+
+def embedding_bag_ref(table, indices, weights=None, mode: str = "sum"):
+    """table f32[V, d]; indices i32[B, L]; weights f32[B, L] (0 = pad).
+
+    mode ∈ {sum, mean}: mean divides by the weight mass per bag."""
+    if weights is None:
+        weights = jnp.ones(indices.shape, table.dtype)
+    gathered = jnp.take(table, indices, axis=0)  # (B, L, d)
+    out = (gathered * weights[..., None]).sum(axis=1)
+    if mode == "mean":
+        denom = jnp.maximum(weights.sum(axis=1, keepdims=True), 1e-9)
+        out = out / denom
+    return out

@@ -1,0 +1,138 @@
+"""Flash-decoding (split-KV) Pallas kernel for the decode_* cells.
+
+Decode attention (q_len=1 vs a long KV cache) is bandwidth-bound and has no
+parallelism along the query axis — FlashDecoding++-style splitting
+parallelizes the *KV* axis instead: the grid covers (batch, head, kv_split),
+each split streams its KV chunk with an online-softmax accumulator and
+emits partial (max, sumexp, acc); the partials are merged with a logsumexp
+combine outside the kernel (numerically exact).
+
+This is the TPU analogue of the paper's insight applied to decode: confine
+each grid step's working set (one KV chunk) to VMEM, and make the merge a
+separate dense pass — the same two-phase structure as TOCAB's partials +
+reduction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_decode_pallas", "flash_decode_ref"]
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(
+    q_ref,  # (1, 1, Hq_grp, d)   — the group's query rows (one kv head)
+    k_ref,  # (1, 1, split, d)
+    v_ref,  # (1, 1, split, d)
+    m_ref,  # (1, 1, 1, Hq_grp)   — partial max
+    l_ref,  # (1, 1, 1, Hq_grp)   — partial sumexp
+    o_ref,  # (1, 1, Hq_grp, d)   — partial (unnormalized) output
+    *,
+    scale: float,
+    kv_len: int,
+    split: int,
+    softcap: float,
+):
+    si = pl.program_id(2)
+    q = q_ref[0, 0].astype(jnp.float32) * scale  # (Hq_grp, d)
+    k = k_ref[0, 0].astype(jnp.float32)  # (split, d)
+    v = v_ref[0, 0].astype(jnp.float32)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    # mask positions beyond the true cache length
+    pos = si * split + jax.lax.iota(jnp.int32, split)
+    s = jnp.where((pos < kv_len)[None, :], s, NEG_INF)
+    m = s.max(axis=-1)  # (Hq_grp,)
+    p = jnp.exp(s - m[:, None])
+    l = p.sum(axis=-1)
+    acc = jax.lax.dot(p, v, preferred_element_type=jnp.float32)
+    m_ref[0, 0, 0, :] = m
+    l_ref[0, 0, 0, :] = l
+    o_ref[0, 0] = acc.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("scale", "kv_splits", "kv_len", "softcap", "interpret"),
+)
+def flash_decode_pallas(
+    q,  # (B, Hq, 1, d) — one new token
+    k,  # (B, Hkv, S, d)
+    v,  # (B, Hkv, S, d)
+    *,
+    scale: float | None = None,
+    kv_len: int | None = None,  # live cache length (≤ S); None → S
+    kv_splits: int = 8,
+    softcap: float = 0.0,
+    interpret: bool = True,
+):
+    B, Hq, _, d = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = d ** -0.5
+    kv_len = S if kv_len is None else kv_len
+    while S % kv_splits:
+        kv_splits //= 2
+    split = S // kv_splits
+    # queries regrouped so each grid step serves one kv head's q-group
+    qg = q.reshape(B, Hkv, group, d)
+
+    grid = (B, Hkv, kv_splits)
+    kernel = functools.partial(
+        _decode_kernel, scale=float(scale), kv_len=int(kv_len),
+        split=split, softcap=float(softcap))
+    m, l, o = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, group, d), lambda b, h, s: (b, h, 0, 0)),
+            pl.BlockSpec((1, 1, split, d), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, split, d), lambda b, h, s: (b, h, s, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, 1, group), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, 1, group), lambda b, h, s: (b, h, s, 0)),
+            pl.BlockSpec((1, 1, group, d), lambda b, h, s: (b, h * kv_splits + s, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, kv_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv, kv_splits, group), jnp.float32),
+            jax.ShapeDtypeStruct((B, Hkv * kv_splits, group, d), jnp.float32),
+        ],
+        interpret=interpret,
+    )(qg, k, v)
+    # logsumexp merge of the split partials (the "reduction phase")
+    o = o.reshape(B, Hkv, kv_splits, group, d)
+    m_star = m.max(axis=2, keepdims=True)  # (B, Hkv, 1, group)
+    alpha = jnp.exp(m - m_star)  # (B, Hkv, splits, group)
+    l_total = (l * alpha).sum(axis=2)  # (B, Hkv, group)
+    o_total = (o * alpha[..., None]).sum(axis=2)  # (B, Hkv, group, d)
+    out = o_total / jnp.maximum(l_total, 1e-30)[..., None]
+    return out.reshape(B, Hq, 1, d).astype(q.dtype)
+
+
+def flash_decode_ref(q, k, v, *, scale=None, kv_len=None, softcap=0.0):
+    """Dense oracle: plain masked softmax attention at q_len=1."""
+    B, Hq, _, d = q.shape
+    _, Hkv, S, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = d ** -0.5
+    kv_len = S if kv_len is None else kv_len
+    kk = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vv = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhsd->bhqs", q.astype(jnp.float32) * scale, kk)
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = jnp.arange(S) < kv_len
+    s = jnp.where(mask[None, None, None, :], s, -jnp.inf)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqs,bhsd->bhqd", p, vv).astype(q.dtype)

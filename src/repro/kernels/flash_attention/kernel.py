@@ -1,0 +1,140 @@
+"""Pallas TPU flash attention (streaming softmax) for the LM architectures.
+
+Features required by the assigned archs: GQA (grouped KV heads), causal
+masking, sliding-window attention (Mixtral), attention logit soft-capping
+(Gemma-2), bidirectional mode (BERT4Rec).
+
+Grid = (batch, q_heads, q_tiles).  K/V for the head's KV group are pinned in
+VMEM by the BlockSpec (one (S, D) slab per grid step); the kernel streams KV
+tiles with an online-softmax accumulator.  Causal / out-of-window KV tiles
+are skipped entirely (block-level early-out) — the same "don't touch data
+you don't need" discipline as TOCAB's compaction.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["flash_attention_pallas", "NEG_INF"]
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,  # (1, 1, q_tile, d)
+    k_ref,  # (1, 1, kv_len, d)
+    v_ref,  # (1, 1, kv_len, d)
+    o_ref,  # (1, 1, q_tile, d)
+    *,
+    kv_tile: int,
+    scale: float,
+    causal: bool,
+    window: int,
+    softcap: float,
+):
+    q_tile, d = q_ref.shape[2], q_ref.shape[3]
+    kv_len = k_ref.shape[2]
+    qi = pl.program_id(2)
+    q_pos = qi * q_tile + jax.lax.iota(jnp.int32, q_tile)  # global q rows
+
+    q = q_ref[0, 0, :, :].astype(jnp.float32) * scale
+    m0 = jnp.full((q_tile,), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((q_tile,), jnp.float32)
+    acc0 = jnp.zeros((q_tile, d), jnp.float32)
+
+    def body(j, carry):
+        m, l, acc = carry
+        kv_start = j * kv_tile
+        kv_pos = kv_start + jax.lax.iota(jnp.int32, kv_tile)
+
+        def compute(_):
+            k = k_ref[0, 0, pl.dslice(kv_start, kv_tile), :].astype(jnp.float32)
+            v = v_ref[0, 0, pl.dslice(kv_start, kv_tile), :].astype(jnp.float32)
+            s = jax.lax.dot_general(
+                q, k, (((1,), (1,)), ((), ())),
+                preferred_element_type=jnp.float32,
+            )  # (q_tile, kv_tile)
+            if softcap > 0.0:
+                s = softcap * jnp.tanh(s / softcap)
+            mask = jnp.ones((q_tile, kv_tile), bool)
+            if causal:
+                mask &= q_pos[:, None] >= kv_pos[None, :]
+            if window > 0:
+                mask &= (q_pos[:, None] - kv_pos[None, :]) < window
+            s = jnp.where(mask, s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            alpha = jnp.exp(m - m_new)
+            p = jnp.exp(s - m_new[:, None])
+            l_new = l * alpha + p.sum(axis=-1)
+            acc_new = acc * alpha[:, None] + jax.lax.dot(
+                p, v, preferred_element_type=jnp.float32
+            )
+            return m_new, l_new, acc_new
+
+        # block-level early-out: skip KV tiles fully above the causal
+        # diagonal or fully left of the sliding window
+        relevant = jnp.bool_(True)
+        if causal:
+            relevant &= kv_start <= qi * q_tile + (q_tile - 1)
+        if window > 0:
+            relevant &= (kv_start + kv_tile - 1) > (qi * q_tile - window)
+        return jax.lax.cond(relevant, compute, lambda _: (m, l, acc), None)
+
+    m, l, acc = jax.lax.fori_loop(0, kv_len // kv_tile, body, (m0, l0, acc0))
+    l = jnp.maximum(l, 1e-30)
+    o_ref[0, 0, :, :] = (acc / l[:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=(
+        "q_tile", "kv_tile", "causal", "window", "softcap", "scale", "interpret",
+    ),
+)
+def flash_attention_pallas(
+    q,  # (B, Hq, Sq, D)
+    k,  # (B, Hkv, Skv, D)
+    v,  # (B, Hkv, Skv, D)
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,  # 0 = unlimited; >0 = sliding window width
+    softcap: float = 0.0,  # 0 = disabled
+    q_tile: int = 128,
+    kv_tile: int = 128,
+    interpret: bool = True,
+):
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    assert Hq % Hkv == 0, (Hq, Hkv)
+    group = Hq // Hkv
+    q_tile = min(q_tile, Sq)
+    kv_tile = min(kv_tile, Skv)
+    assert Sq % q_tile == 0 and Skv % kv_tile == 0
+    if scale is None:
+        scale = D ** -0.5
+
+    grid = (B, Hq, Sq // q_tile)
+    kernel = functools.partial(
+        _attn_kernel,
+        kv_tile=kv_tile,
+        scale=float(scale),
+        causal=causal,
+        window=int(window),
+        softcap=float(softcap),
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, q_tile, D), lambda b, h, i: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, Skv, D), lambda b, h, i: (b, h // group, 0, 0)),
+            pl.BlockSpec((1, 1, Skv, D), lambda b, h, i: (b, h // group, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_tile, D), lambda b, h, i: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,42 @@
+"""jit'd wrapper selecting Pallas flash attention vs XLA reference.
+
+The models call :func:`attention`; on the CPU container Pallas runs in
+interpret mode (slow, correctness only), so the default backend is the XLA
+reference path and the dry-run lowers the XLA path.  On real TPU hardware
+``backend='pallas'`` activates the kernel.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .kernel import flash_attention_pallas
+from .ref import attention_ref
+
+__all__ = ["attention"]
+
+
+@partial(
+    jax.jit,
+    static_argnames=("scale", "causal", "window", "softcap", "backend", "interpret"),
+)
+def attention(
+    q, k, v,
+    *,
+    scale=None,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    backend: str = "xla",
+    interpret: bool = True,
+):
+    if backend == "pallas":
+        return flash_attention_pallas(
+            q, k, v,
+            scale=scale, causal=causal, window=window, softcap=softcap,
+            interpret=interpret,
+        )
+    return attention_ref(
+        q, k, v, scale=scale, causal=causal, window=window, softcap=softcap
+    )

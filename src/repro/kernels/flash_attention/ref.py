@@ -1,0 +1,40 @@
+"""Pure-jnp oracle for flash attention (dense softmax, fp32)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+__all__ = ["attention_ref"]
+
+
+def attention_ref(
+    q, k, v,
+    *,
+    scale: float | None = None,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+):
+    """(B, Hq, Sq, D) x (B, Hkv, Skv, D)² → (B, Hq, Sq, D); GQA by repeat."""
+    B, Hq, Sq, D = q.shape
+    _, Hkv, Skv, _ = k.shape
+    group = Hq // Hkv
+    if scale is None:
+        scale = D ** -0.5
+    k = jnp.repeat(k, group, axis=1)
+    v = jnp.repeat(v, group, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), k.astype(jnp.float32))
+    s = s * scale
+    if softcap > 0.0:
+        s = softcap * jnp.tanh(s / softcap)
+    q_pos = jnp.arange(Sq)[:, None]
+    kv_pos = jnp.arange(Skv)[None, :]
+    mask = jnp.ones((Sq, Skv), bool)
+    if causal:
+        mask &= q_pos >= kv_pos
+    if window > 0:
+        mask &= (q_pos - kv_pos) < window
+    s = jnp.where(mask, s, -jnp.inf)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / p.sum(axis=-1, keepdims=True)
+    out = jnp.einsum("bhqk,bhkd->bhqd", p, v.astype(jnp.float32))
+    return out.astype(q.dtype)

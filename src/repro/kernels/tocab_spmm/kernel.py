@@ -1,0 +1,107 @@
+"""Pallas TPU kernel for the TOCAB blocked SpMM — the paper's hot loop.
+
+One grid step = one TOCAB subgraph (paper Alg. 4).  The ``BlockSpec`` pins the
+block's contiguous source-value window in VMEM — on TPU the residency the
+paper gets *probabilistically* from the GPU L2 is *guaranteed* by the DMA
+schedule.  Per-edge messages are gathered from the VMEM window and accumulated
+into a dense, compacted ``partials`` slab (local-ID compaction), which is
+written back as one coalesced burst.  The cross-block reduction (paper
+Fig. 5) happens outside the kernel as a flat segment-sum.
+
+Two accumulation regimes (``mode``):
+
+* ``onehot`` — scatter expressed as ``onehotᵀ @ msgs`` small dense matmuls:
+  the MXU-native adaptation (irregular traffic → systolic work).  Preferred
+  when ``local_budget`` is small relative to the edge chunk.
+* ``scatter`` — in-VMEM ``.at[].add`` accumulation (VPU path); preferred for
+  very sparse blocks where the one-hot matmul would be mostly zeros.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["tocab_spmm_pallas"]
+
+LANE = 128  # TPU lane width; last dims should be multiples of this
+
+
+def _kernel(
+    window_ref,  # (block_size, d)        VMEM — the value window
+    widx_ref,  # (1, edge_budget)         VMEM — src index within window
+    cidx_ref,  # (1, edge_budget)         VMEM — compacted dst local id
+    evals_ref,  # (1, edge_budget)        VMEM — edge values (0 for padding)
+    out_ref,  # (1, local_budget, d)      VMEM — dense partial slab
+    *,
+    chunk: int,
+    mode: str,
+):
+    local_budget = out_ref.shape[1]
+    d = out_ref.shape[2]
+    edge_budget = widx_ref.shape[1]
+    acc = jnp.zeros((local_budget, d), jnp.float32)
+
+    def body(c, acc):
+        sl = pl.dslice(c * chunk, chunk)
+        widx = widx_ref[0, sl]
+        cidx = cidx_ref[0, sl]
+        ev = evals_ref[0, sl]
+        # gather from the VMEM-resident window (the confined random read)
+        msgs = jnp.take(window_ref[...], widx, axis=0) * ev[:, None]
+        if mode == "onehot":
+            # scatter == one-hot matmul: (local_budget, chunk) @ (chunk, d)
+            onehot = (
+                cidx[None, :] == jax.lax.iota(jnp.int32, local_budget)[:, None]
+            ).astype(jnp.float32)
+            acc = acc + jax.lax.dot(
+                onehot, msgs, preferred_element_type=jnp.float32
+            )
+        else:  # scatter (VPU)
+            acc = acc.at[cidx].add(msgs)
+        return acc
+
+    acc = jax.lax.fori_loop(0, edge_budget // chunk, body, acc, unroll=False)
+    out_ref[0, :, :] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "local_budget", "chunk", "mode", "interpret"),
+)
+def tocab_spmm_pallas(
+    values,  # f32[num_blocks*block_size, d]  (padded)
+    window_idx,  # i32[num_blocks, edge_budget]
+    compact_idx,  # i32[num_blocks, edge_budget]
+    edge_vals,  # f32[num_blocks, edge_budget] (0 where padded)
+    *,
+    block_size: int,
+    local_budget: int,
+    chunk: int = 512,
+    mode: str = "onehot",
+    interpret: bool = True,
+):
+    """Phase-2 partials: returns f32[num_blocks, local_budget, d]."""
+    num_blocks, edge_budget = window_idx.shape
+    d = values.shape[1]
+    assert values.shape[0] == num_blocks * block_size, (
+        f"values must be padded to num_blocks*block_size, got {values.shape}"
+    )
+    assert edge_budget % chunk == 0, (edge_budget, chunk)
+
+    grid = (num_blocks,)
+    return pl.pallas_call(
+        functools.partial(_kernel, chunk=chunk, mode=mode),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_size, d), lambda b: (b, 0)),  # VMEM window
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, local_budget, d), lambda b: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks, local_budget, d), jnp.float32),
+        interpret=interpret,
+    )(values, window_idx, compact_idx, edge_vals)

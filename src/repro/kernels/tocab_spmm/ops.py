@@ -1,0 +1,73 @@
+"""jit'd public wrapper: BlockedGraph → Pallas TOCAB SpMM → global result.
+
+Handles padding (values to num_blocks·block_size rows; feature dim to the
+TPU lane width) and runs the phase-3 reduction.  Numerically identical to
+``repro.core.tocab.tocab_pull`` (sum semiring) — asserted in tests.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import BlockedGraph
+from repro.core.tocab import reduce_partials
+
+from .kernel import LANE, tocab_spmm_pallas
+from .ref import tocab_spmm_ref
+
+__all__ = ["tocab_spmm", "LANE"]
+
+
+def _roundup(x: int, to: int) -> int:
+    return -(-x // to) * to
+
+
+@partial(jax.jit, static_argnames=("mode", "interpret", "use_ref", "chunk"))
+def tocab_spmm(
+    bg: BlockedGraph,
+    x: jnp.ndarray,  # f32[n] or f32[n, d]
+    mode: str = "onehot",
+    chunk: int = 256,
+    interpret: bool = True,
+    use_ref: bool = False,
+):
+    """y = Aᵀ-gather-reduce of x through the TOCAB blocked layout.
+
+    ``x`` may be (n,) — SpMV — or (n, d) — SpMM / GNN aggregation.
+    Returns the same rank as the input."""
+    assert bg.direction == "pull"
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[:, None]
+    n, d = x.shape
+    d_pad = _roundup(d, LANE)
+    rows_pad = bg.num_blocks * bg.block_size
+    values = jnp.zeros((rows_pad, d_pad), jnp.float32)
+    values = values.at[:n, :d].set(x.astype(jnp.float32))
+
+    edge_vals = bg.edge_vals
+    if edge_vals is None:
+        edge_vals = bg.edge_mask.astype(jnp.float32)
+    else:
+        edge_vals = jnp.where(bg.edge_mask, edge_vals, 0.0)
+
+    chunk = min(chunk, bg.edge_budget)
+    # edge_budget is padded to 128; make it divisible by chunk
+    while bg.edge_budget % chunk:
+        chunk //= 2
+
+    fn = tocab_spmm_ref if use_ref else partial(
+        tocab_spmm_pallas, chunk=chunk, mode=mode, interpret=interpret
+    )
+    partials = fn(
+        values,
+        bg.window_idx,
+        bg.compact_idx,
+        edge_vals,
+        block_size=bg.block_size,
+        local_budget=bg.local_budget,
+    )
+    out = reduce_partials(bg, partials, reduce="sum")[:, :d]
+    return out[:, 0] if squeeze else out

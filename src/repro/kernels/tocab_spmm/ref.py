@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the TOCAB blocked SpMM kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["tocab_spmm_ref"]
+
+
+def tocab_spmm_ref(
+    values,  # f32[num_blocks*block_size, d]
+    window_idx,  # i32[num_blocks, edge_budget]
+    compact_idx,  # i32[num_blocks, edge_budget]
+    edge_vals,  # f32[num_blocks, edge_budget]
+    *,
+    block_size: int,
+    local_budget: int,
+):
+    """partials[b, l, :] = Σ_{e: compact_idx[b,e]==l}
+    edge_vals[b,e] · values[b·B + window_idx[b,e], :]"""
+    num_blocks, edge_budget = window_idx.shape
+    src_global = window_idx + (
+        jnp.arange(num_blocks, dtype=jnp.int32)[:, None] * block_size
+    )
+    msgs = values[src_global] * edge_vals[..., None]  # (nb, eb, d)
+    flat_idx = (
+        compact_idx
+        + jnp.arange(num_blocks, dtype=jnp.int32)[:, None] * local_budget
+    )
+    partials = jax.ops.segment_sum(
+        msgs.reshape(-1, values.shape[1]),
+        flat_idx.reshape(-1),
+        num_segments=num_blocks * local_budget,
+    )
+    return partials.reshape(num_blocks, local_budget, values.shape[1])

@@ -1,0 +1,328 @@
+"""Dry-run cell builders: (arch × shape) → (step_fn, arg specs, model FLOPs).
+
+Everything is built with ``jax.eval_shape`` + ``ShapeDtypeStruct`` — no
+device allocation ever happens for the full-size configs (assignment rule:
+FULL configs are exercised only via the dry-run).
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs import ArchSpec, ShapeCell, get_arch
+from repro.dist.sharding import logical_to_spec, sharding_for
+from repro.models import transformer as tfm
+from repro.models import bert4rec as b4r
+from repro.models.gnn import GNNConfig, GraphBatch, gnn_loss_fn
+from repro.train.optim import adamw, constant_schedule
+from repro.train.trainer import make_train_step
+
+__all__ = ["Cell", "build_cell", "arg_bytes_per_device"]
+
+KEY = jax.random.PRNGKey(0)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch_id: str
+    shape_name: str
+    kind: str
+    fn: Callable  # to be jitted + lowered with ``args``
+    args: tuple  # ShapeDtypeStructs (sharding-annotated)
+    model_flops: float
+    tokens_or_items: float = 0.0
+    description: str = ""
+
+
+def _sds(shape, dtype, logical, mesh) -> jax.ShapeDtypeStruct:
+    sh = sharding_for(logical, shape, mesh)
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sh)
+
+
+def _annotate_tree(shapes_tree, logical_tree, mesh):
+    """Attach NamedShardings to a tree of ShapeDtypeStructs."""
+    def one(axes, s):
+        spec = logical_to_spec(axes, s.shape, mesh)
+        return jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                    sharding=NamedSharding(mesh, spec))
+
+    return jax.tree.map(
+        one, logical_tree, shapes_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(a, (str, type(None))) for a in x),
+    )
+
+
+def _match_opt_shardings(opt_shapes, params_ann, mesh):
+    """Give optimizer-state leaves the sharding of the same-shaped param
+    (Adam moments mirror params exactly); others replicated."""
+    by_shape = {}
+    for leaf in jax.tree.leaves(params_ann):
+        by_shape.setdefault((leaf.shape, str(leaf.dtype)), leaf.sharding)
+
+    def one(s):
+        sh = by_shape.get((s.shape, str(s.dtype)))
+        if sh is None:
+            sh = NamedSharding(mesh, P())
+        return jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh)
+
+    return jax.tree.map(one, opt_shapes)
+
+
+def _optimizer():
+    return adamw(constant_schedule(1e-4), weight_decay=0.0)
+
+
+# --------------------------------------------------------------------- #
+# LM cells
+# --------------------------------------------------------------------- #
+def _lm_param_specs(cfg, mesh):
+    shapes = jax.eval_shape(lambda k: tfm.init_params(cfg, k), KEY)
+    return _annotate_tree(shapes, tfm.param_logical_axes(cfg), mesh)
+
+
+def _lm_train_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg = spec.make_model_cfg()
+    params = _lm_param_specs(cfg, mesh)
+    opt = _optimizer()
+    opt_shapes = jax.eval_shape(opt.init, params)
+    opt_ann = _match_opt_shardings(opt_shapes, params, mesh)
+    B, S = cell.global_batch, cell.seq_len
+    batch = {"tokens": _sds((B, S + 1), jnp.int32, ("batch", None), mesh)}
+    step = make_train_step(lambda p, b: tfm.loss_fn(p, b, cfg), opt)
+    tokens = B * S
+    flops = 6.0 * cfg.active_param_count() * tokens
+    return Cell(spec.arch_id, cell.name, "train", step,
+                (params, opt_ann, batch), flops, tokens,
+                f"train_step {cfg.name} B={B} S={S}")
+
+
+def _lm_prefill_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg = spec.make_model_cfg()
+    params = _lm_param_specs(cfg, mesh)
+    B, S = cell.global_batch, cell.seq_len
+    tokens_spec = _sds((B, S), jnp.int32, ("batch", None), mesh)
+    fn = partial(tfm.serve_prefill, cfg=cfg)
+    flops = 2.0 * cfg.active_param_count() * B * S
+    return Cell(spec.arch_id, cell.name, "prefill", fn,
+                (params, tokens_spec), flops, B * S,
+                f"serve_prefill {cfg.name} B={B} S={S}")
+
+
+def _lm_decode_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg = spec.make_model_cfg()
+    params = _lm_param_specs(cfg, mesh)
+    B, S = cell.global_batch, cell.seq_len
+    cache_shapes = jax.eval_shape(
+        lambda: tfm.init_cache(cfg, B, horizon=S))
+    cache_logical = jax.tree.map(
+        lambda s: ("layers", "batch", "kv_heads", "seq", None), cache_shapes)
+    cache = _annotate_tree(cache_shapes, cache_logical, mesh)
+    token = _sds((B, 1), jnp.int32, ("batch", None), mesh)
+    pos = _sds((), jnp.int32, (), mesh)
+    fn = partial(tfm.serve_decode, cfg=cfg)
+    # per-step flops: params matmuls + attention against live KV
+    if cfg.layer_pattern == "window":
+        s_eff = min(cfg.window, S) * cfg.n_layers
+    elif cfg.layer_pattern == "alternating":
+        s_eff = (min(cfg.window, S) + S) * cfg.n_layers // 2
+    else:
+        s_eff = S * cfg.n_layers
+    attn_flops = 4.0 * B * cfg.n_heads * cfg.head_dim * s_eff
+    flops = 2.0 * cfg.active_param_count() * B + attn_flops
+    return Cell(spec.arch_id, cell.name, "decode", fn,
+                (params, token, pos, cache), flops, B,
+                f"serve_decode {cfg.name} B={B} KV={S}")
+
+
+# --------------------------------------------------------------------- #
+# GNN cells
+# --------------------------------------------------------------------- #
+def _gnn_batch_specs(cfg: GNNConfig, cell: ShapeCell, mesh,
+                     triplet_cap: int = 8) -> GraphBatch:
+    if cell.kind == "gnn_minibatch":
+        counts = [cell.batch_nodes]
+        for f in cell.fanout:
+            counts.append(counts[-1] * f)
+        N = sum(counts)
+        E = sum(c * f for c, f in zip(counts[:-1], cell.fanout))
+        graph_level = False
+        G = 0
+    elif cell.kind == "gnn_molecule":
+        N = cell.n_graphs * cell.nodes_per_graph
+        E = cell.n_graphs * cell.edges_per_graph
+        graph_level = True
+        G = cell.n_graphs
+    else:  # gnn_full
+        N, E = cell.n_nodes, cell.n_edges
+        graph_level = False
+        G = 0
+    # §Perf: pad node/edge counts to a mesh-friendly multiple — odd counts
+    # (ogb_products: N=2,449,029, E=61,859,140) otherwise force the whole
+    # edge pipeline to replicate (divisibility fallback), costing ~16× on
+    # the memory term.  Padded slots are masked (edge_mask/node_mask).
+    N = -(-N // 512) * 512
+    E = -(-E // 512) * 512
+    d = cell.d_feat
+    need_geo = cfg.arch == "dimenet"
+    T = -(-(E * triplet_cap) // 128) * 128 if need_geo else 0
+    mk = lambda shape, dt, ax: _sds(shape, dt, ax, mesh)
+    kwargs = {}
+    if need_geo:
+        kwargs.update(
+            positions=mk((N, 3), jnp.float32, ("nodes", None)),
+            t_kj=mk((T,), jnp.int32, ("edges",)),
+            t_ji=mk((T,), jnp.int32, ("edges",)),
+            t_mask=mk((T,), jnp.bool_, ("edges",)),
+        )
+    if graph_level or need_geo:
+        kwargs.setdefault("graph_ids",
+                          mk((N,), jnp.int32, ("nodes",)))
+    labels = (mk((G,), jnp.float32, (None,)) if (graph_level and need_geo)
+              else mk((G,), jnp.int32, (None,)) if graph_level
+              else mk((N,), jnp.int32, ("nodes",)))
+    return GraphBatch(
+        node_feat=mk((N, d), jnp.float32, ("nodes", None)),
+        edge_src=mk((E,), jnp.int32, ("edges",)),
+        edge_dst=mk((E,), jnp.int32, ("edges",)),
+        edge_mask=mk((E,), jnp.bool_, ("edges",)),
+        labels=labels,
+        node_mask=mk((N,), jnp.bool_, ("nodes",)),
+        **kwargs,
+    ), N, E, (T if need_geo else 0)
+
+
+def _gnn_flops(cfg: GNNConfig, N, E, T, d_in) -> float:
+    d = cfg.d_hidden
+    if cfg.arch == "gat":
+        per_layer = 2 * N * d_in * cfg.n_heads * d + 2 * E * cfg.n_heads * d * 2
+        return float(cfg.n_layers * per_layer) * 3  # fwd+bwd
+    if cfg.arch == "gin":
+        per_layer = 2 * N * (d_in * d + d * d) + E * d
+        return float(cfg.n_layers * per_layer) * 3
+    if cfg.arch == "sage":
+        per_layer = 2 * N * d_in * d * 2 + E * d
+        return float(cfg.n_layers * per_layer) * 3
+    # dimenet: triplet bilinear dominates
+    per_block = 2 * E * d * d + 2 * T * cfg.n_bilinear + 2 * E * cfg.n_bilinear * d
+    return float(cfg.n_blocks * per_block + 2 * N * d_in * d) * 3
+
+
+def _gnn_train_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    base = spec.make_model_cfg()
+    graph_level = cell.kind == "gnn_molecule"
+    cfg = dataclasses.replace(
+        base, d_in=cell.d_feat, graph_level=graph_level,
+        n_classes=(1 if (base.arch == "dimenet" and graph_level)
+                   else base.n_classes))
+    batch, N, E, T = _gnn_batch_specs(cfg, cell, mesh)
+    from repro.models.gnn import init_gnn
+    params_shapes = jax.eval_shape(lambda k: init_gnn(k, cfg), KEY)
+    # GNN params are small → replicate
+    params = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype,
+                                       sharding=NamedSharding(mesh, P())),
+        params_shapes)
+    opt = _optimizer()
+    opt_ann = _match_opt_shardings(jax.eval_shape(opt.init, params), params, mesh)
+    step = make_train_step(lambda p, b: gnn_loss_fn(p, b, cfg), opt)
+    flops = _gnn_flops(cfg, N, E, T, cell.d_feat)
+    return Cell(spec.arch_id, cell.name, "gnn_train", step,
+                (params, opt_ann, batch), flops, E,
+                f"gnn train {cfg.arch} N={N} E={E} T={T}")
+
+
+# --------------------------------------------------------------------- #
+# RecSys cells
+# --------------------------------------------------------------------- #
+def _recsys_cell(spec: ArchSpec, cell: ShapeCell, mesh) -> Cell:
+    cfg = spec.make_model_cfg()
+    params_shapes = jax.eval_shape(lambda k: b4r.init_bert4rec(cfg, k), KEY)
+    logical = jax.tree.map(lambda s: (None,) * s.ndim, params_shapes)
+    logical["item_emb"] = ("rows", None)  # shard the huge table
+    params = _annotate_tree(params_shapes, logical, mesh)
+    L = cfg.max_len
+    d = cfg.d_model
+    backbone = cfg.n_blocks * (4 * d * d + 2 * d * cfg.d_ff_mult * d)
+    if cell.kind == "recsys_train":
+        B, M, K = cell.batch, cfg.max_masked, cfg.num_negatives
+        batch = {
+            "items": _sds((B, L), jnp.int32, ("batch", None), mesh),
+            "mask_pos": _sds((B, M), jnp.int32, ("batch", None), mesh),
+            "pos_labels": _sds((B, M), jnp.int32, ("batch", None), mesh),
+            "pos_weight": _sds((B, M), jnp.float32, ("batch", None), mesh),
+            "negatives": _sds((K,), jnp.int32, (None,), mesh),
+        }
+        opt = _optimizer()
+        opt_ann = _match_opt_shardings(
+            jax.eval_shape(opt.init, params), params, mesh)
+        step = make_train_step(lambda p, b: b4r.bert4rec_loss_fn(p, b, cfg), opt)
+        flops = 6.0 * backbone * B * L + 6.0 * B * M * (K + 1) * d
+        return Cell(spec.arch_id, cell.name, "recsys_train", step,
+                    (params, opt_ann, batch), flops, B,
+                    f"bert4rec train B={B} L={L} sampled_softmax")
+    if cell.kind == "recsys_serve":
+        B = cell.batch
+        items = _sds((B, L), jnp.int32, ("batch", None), mesh)
+        fn = partial(b4r.bert4rec_score, cfg=cfg)
+        flops = 2.0 * backbone * B * L + 2.0 * B * cfg.vocab * d
+        return Cell(spec.arch_id, cell.name, "recsys_serve", fn,
+                    (params, items), flops, B,
+                    f"bert4rec score B={B} V={cfg.vocab}")
+    # retrieval
+    B, C = cell.batch, cell.n_candidates
+    items = _sds((B, L), jnp.int32, (None, None), mesh)
+    cands = _sds((C,), jnp.int32, ("candidates",), mesh)
+    fn = partial(b4r.bert4rec_retrieve, cfg=cfg)
+    flops = 2.0 * backbone * B * L + 2.0 * C * d
+    return Cell(spec.arch_id, cell.name, "recsys_retrieval", fn,
+                (params, items, cands), flops, C,
+                f"bert4rec retrieve C={C}")
+
+
+# --------------------------------------------------------------------- #
+def build_cell(arch_id: str, shape_name: str, mesh: Mesh,
+               overrides: Optional[dict] = None) -> Cell:
+    """``overrides`` are dataclasses.replace'd into the model config —
+    used by the roofline pass (use_scan=False) and the §Perf hillclimb
+    (remat/sharding/dtype variants)."""
+    spec = get_arch(arch_id)
+    if overrides:
+        base_make = spec.make_model_cfg
+        spec = dataclasses.replace(
+            spec, make_model_cfg=lambda: dataclasses.replace(
+                base_make(), **overrides))
+    cell = next(c for c in spec.shapes if c.name == shape_name)
+    if spec.family == "lm":
+        if cell.kind == "train":
+            return _lm_train_cell(spec, cell, mesh)
+        if cell.kind == "prefill":
+            return _lm_prefill_cell(spec, cell, mesh)
+        return _lm_decode_cell(spec, cell, mesh)
+    if spec.family == "gnn":
+        return _gnn_train_cell(spec, cell, mesh)
+    return _recsys_cell(spec, cell, mesh)
+
+
+def arg_bytes_per_device(args, num_devices: int) -> float:
+    """Resident argument bytes per device implied by the arg shardings."""
+    total = 0.0
+    for leaf in jax.tree.leaves(args):
+        nbytes = float(np.prod(leaf.shape)) * jnp.dtype(leaf.dtype).itemsize
+        sh = getattr(leaf, "sharding", None)
+        if sh is not None and getattr(sh, "spec", None) is not None:
+            mesh = sh.mesh
+            denom = 1
+            for ax in jax.tree.leaves(tuple(sh.spec)):
+                if ax is not None:
+                    denom *= dict(mesh.shape)[ax]
+            total += nbytes / denom
+        else:
+            total += nbytes
+    return total

@@ -1,0 +1,138 @@
+"""Multi-pod dry-run: lower + compile every (arch × shape × mesh) cell.
+
+The ``os.environ`` line below MUST stay the first statement — jax locks the
+device count on first init, and the production meshes need 512 host devices.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch tinyllama-1.1b \
+        --shape train_4k [--multi-pod]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this emits JSON with memory_analysis, cost_analysis and the
+collective schedule parsed from the post-SPMD HLO (§Roofline inputs).
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import all_cells, get_arch
+from repro.dist.sharding import use_mesh_rules
+from repro.launch.cells import Cell, arg_bytes_per_device, build_cell
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+from repro.launch.mesh import make_production_mesh
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+
+def _cost_get(cost: dict, key: str) -> float:
+    if not cost:
+        return 0.0
+    return float(cost.get(key, 0.0))
+
+
+def run_cell(arch_id: str, shape_name: str, multi_pod: bool,
+             out_dir: str = OUT_DIR, save_hlo: bool = False) -> dict:
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    t0 = time.time()
+    rec = dict(arch=arch_id, shape=shape_name, mesh=mesh_name,
+               num_devices=int(n_dev), ok=False)
+    try:
+        with use_mesh_rules(mesh):
+            cell = build_cell(arch_id, shape_name, mesh)
+            rec["description"] = cell.description
+            rec["model_flops"] = cell.model_flops
+            lowered = jax.jit(cell.fn).lower(*cell.args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+        cost = compiled.cost_analysis() or {}
+        try:
+            mem = compiled.memory_analysis()
+        except Exception:
+            mem = None
+        hlo = compiled.as_text()
+        coll = parse_collectives(hlo, n_dev)
+        # cost_analysis on the SPMD-partitioned module reports per-partition
+        # numbers; scale to whole-program totals for the roofline.
+        flops_total = _cost_get(cost, "flops") * n_dev
+        bytes_total = _cost_get(cost, "bytes accessed") * n_dev
+        rl = roofline_terms(flops_total, bytes_total, coll, n_dev,
+                            model_flops=cell.model_flops)
+        rec.update(
+            ok=True,
+            lower_s=round(t_lower, 2),
+            compile_s=round(t_compile, 2),
+            flops_per_device=_cost_get(cost, "flops"),
+            bytes_per_device=_cost_get(cost, "bytes accessed"),
+            arg_bytes_per_device=arg_bytes_per_device(cell.args, n_dev),
+            memory_analysis=(str(mem) if mem is not None else None),
+            hlo_ops=hlo.count("\n"),
+            **{k: (v if not isinstance(v, dict) else v)
+               for k, v in rl.items()},
+        )
+        if save_hlo:
+            os.makedirs(out_dir, exist_ok=True)
+            with open(os.path.join(
+                    out_dir, f"{arch_id}__{shape_name}__{mesh_name}.hlo"),
+                    "w") as f:
+                f.write(hlo)
+    except Exception as e:
+        rec["error"] = f"{type(e).__name__}: {e}"
+        rec["traceback"] = traceback.format_exc()[-2000:]
+    rec["total_s"] = round(time.time() - t0, 2)
+    os.makedirs(out_dir, exist_ok=True)
+    path = os.path.join(out_dir, f"{arch_id}__{shape_name}__{mesh_name}.json")
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1, default=str)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch")
+    ap.add_argument("--shape")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default=OUT_DIR)
+    args = ap.parse_args()
+
+    cells = []
+    if args.all:
+        for arch_id, cell, _ in all_cells():
+            cells.append((arch_id, cell.name))
+    else:
+        assert args.arch and args.shape, "--arch/--shape or --all"
+        cells = [(args.arch, args.shape)]
+
+    n_ok = 0
+    for arch_id, shape_name in cells:
+        spec = get_arch(arch_id)
+        if shape_name in spec.skip_shapes:
+            print(f"SKIP {arch_id} × {shape_name} (per DESIGN.md)")
+            continue
+        rec = run_cell(arch_id, shape_name, args.multi_pod, args.out,
+                       args.save_hlo)
+        if rec["ok"]:
+            n_ok += 1
+            print(f"OK   {arch_id} × {shape_name} [{rec['mesh']}] "
+                  f"compile={rec['compile_s']}s "
+                  f"dom={rec['dominant']} bound={rec['bound_seconds']:.3e}s "
+                  f"args/dev={rec['arg_bytes_per_device']/2**30:.2f}GiB")
+        else:
+            print(f"FAIL {arch_id} × {shape_name} [{rec['mesh']}]: "
+                  f"{rec['error']}")
+    print(f"\n{n_ok}/{len(cells)} cells compiled")
+
+
+if __name__ == "__main__":
+    main()

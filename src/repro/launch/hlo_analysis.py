@@ -1,0 +1,144 @@
+"""Roofline-term extraction from a compiled dry-run artifact.
+
+``cost_analysis`` gives HLO FLOPs and bytes; collective bytes are NOT in
+cost_analysis, so we parse the post-SPMD HLO text and sum wire bytes of
+every all-gather / all-reduce / reduce-scatter / all-to-all /
+collective-permute, using ring-algorithm per-device wire formulas.
+
+Hardware constants (assignment): TPU v5e-like — 197 TFLOP/s bf16 per chip,
+819 GB/s HBM, ~50 GB/s/link ICI.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+__all__ = ["HW", "CollectiveStats", "parse_collectives", "roofline_terms"]
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # B/s / chip
+ICI_BW = 50e9  # B/s / link
+
+HW = dict(peak_flops=PEAK_FLOPS, hbm_bw=HBM_BW, ici_bw=ICI_BW)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16, "token": 0, "s4": 1, "u4": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_IOTA_GROUPS_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_EXPL_GROUPS_RE = re.compile(r"replica_groups=\{\{([0-9, ]+)\}")
+
+_COLL_KINDS = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    counts: dict
+    bytes_by_kind: dict  # raw tensor bytes (outputs)
+    wire_bytes: float  # per-device ring-model wire traffic (sum over ops)
+
+    @property
+    def total_bytes(self) -> float:
+        return float(sum(self.bytes_by_kind.values()))
+
+
+def _shapes_bytes(text: str) -> int:
+    """Sum bytes of all shapes in an HLO result-type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(text):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _IOTA_GROUPS_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _EXPL_GROUPS_RE.search(line)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def parse_collectives(hlo_text: str, num_devices: int) -> CollectiveStats:
+    counts = {k: 0 for k in _COLL_KINDS}
+    bytes_by_kind = {k: 0.0 for k in _COLL_KINDS}
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        if "=" not in line:
+            continue
+        # match `%name = <shape(s)> <op>(` — op name right before '('
+        m = re.search(r"=\s+(\([^)]*\)|[a-z0-9\[\],{}\s]*?)\s*"
+                      r"(all-reduce|all-gather|reduce-scatter|all-to-all|"
+                      r"collective-permute)(?:-start|-done)?\(", line)
+        if not m:
+            continue
+        shape_txt, kind = m.group(1), m.group(2)
+        if kind + "-done(" in line:
+            continue  # avoid double counting start/done pairs
+        size = _shapes_bytes(shape_txt)
+        g = _group_size(line, num_devices)
+        counts[kind] += 1
+        bytes_by_kind[kind] += size
+        if g <= 1:
+            continue
+        frac = (g - 1) / g
+        if kind == "all-reduce":
+            wire += 2.0 * size * frac  # reduce-scatter + all-gather ring
+        elif kind == "all-gather":
+            wire += size * frac  # size = full output
+        elif kind == "reduce-scatter":
+            wire += size * g * frac  # size = scattered output; input = g×
+        elif kind == "all-to-all":
+            wire += size * frac
+        else:  # collective-permute
+            wire += size
+    return CollectiveStats(counts=counts, bytes_by_kind=bytes_by_kind,
+                           wire_bytes=wire)
+
+
+def roofline_terms(
+    flops_total: float,
+    bytes_total: float,
+    coll: CollectiveStats,
+    num_devices: int,
+    model_flops: Optional[float] = None,
+) -> dict:
+    """Three roofline terms in seconds + diagnostics.
+
+    ``flops_total``/``bytes_total`` are whole-program HLO numbers from
+    cost_analysis (already per-partition after SPMD on CPU dry-runs we
+    multiply/divide explicitly at the call site — see dryrun.py)."""
+    t_compute = flops_total / (num_devices * PEAK_FLOPS)
+    t_memory = bytes_total / (num_devices * HBM_BW)
+    # wire bytes are per-device ring traffic; each chip drives its links
+    t_collective = coll.wire_bytes / ICI_BW
+    dominant = max(
+        ("compute", t_compute), ("memory", t_memory),
+        ("collective", t_collective), key=lambda kv: kv[1])
+    out = dict(
+        t_compute=t_compute, t_memory=t_memory, t_collective=t_collective,
+        dominant=dominant[0], bound_seconds=dominant[1],
+        collective_counts=coll.counts,
+        collective_bytes=coll.total_bytes,
+        wire_bytes=coll.wire_bytes,
+    )
+    if model_flops:
+        out["model_flops"] = model_flops
+        out["useful_flop_frac"] = model_flops / max(flops_total, 1.0)
+        # roofline fraction: useful work / (time lower-bounded by dominant term)
+        t_ideal = model_flops / (num_devices * PEAK_FLOPS)
+        out["roofline_fraction"] = t_ideal / max(dominant[1], 1e-30)
+    return out

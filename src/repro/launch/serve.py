@@ -1,0 +1,94 @@
+"""Serving launcher: batched-request loop for the LM (decode w/ KV cache)
+or recsys (catalogue scoring) families.
+
+    PYTHONPATH=src python -m repro.launch.serve --arch mixtral-8x22b \
+        [--requests 16] [--max-new 32]
+
+Uses smoke configs on CPU (the full configs are dry-run territory); the
+serving loop itself — prefill, ring-buffer KV caches, batched decode —
+is the production code path lowered in the decode_* cells.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_arch
+
+
+def serve_lm(spec, args):
+    from repro.models import transformer as tfm
+    cfg = spec.make_smoke_cfg()
+    params = tfm.init_params(cfg, jax.random.PRNGKey(0))
+    B = args.requests
+    horizon = args.prompt_len + args.max_new
+    rng = np.random.default_rng(0)
+    prompts = jnp.asarray(rng.integers(0, cfg.vocab, (B, args.prompt_len)),
+                          jnp.int32)
+
+    # prefill: run the forward over the prompt, fill the cache by decoding
+    # prompt tokens (didactic CPU path; real serving fuses this)
+    cache = tfm.init_cache(cfg, B, horizon)
+    decode = jax.jit(
+        lambda p, t, pos, c: tfm.serve_decode(p, t, pos, c, cfg))
+    tok = prompts[:, :1]
+    t0 = time.perf_counter()
+    for t in range(args.prompt_len - 1):
+        _, cache = decode(params, prompts[:, t:t + 1], jnp.int32(t), cache)
+    generated = []
+    tok = prompts[:, -1:]
+    for t in range(args.prompt_len - 1, args.prompt_len + args.max_new - 1):
+        logits, cache = decode(params, tok, jnp.int32(t), cache)
+        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+        generated.append(tok)
+    jax.block_until_ready(tok)
+    dt = time.perf_counter() - t0
+    total_tokens = B * (args.prompt_len + args.max_new)
+    print(f"{B} requests × ({args.prompt_len} prompt + {args.max_new} new) "
+          f"in {dt:.2f}s → {total_tokens/dt:.0f} tok/s (greedy)")
+    out = jnp.concatenate(generated, axis=1)
+    print("sample continuation (request 0):", np.asarray(out[0])[:16])
+
+
+def serve_recsys(spec, args):
+    import dataclasses
+    from repro.models.bert4rec import bert4rec_score, init_bert4rec
+    cfg = dataclasses.replace(spec.make_smoke_cfg(), vocab=5000)
+    params = init_bert4rec(cfg, jax.random.PRNGKey(0))
+    rng = np.random.default_rng(0)
+    items = jnp.asarray(rng.integers(0, cfg.vocab,
+                                     (args.requests, cfg.max_len)), jnp.int32)
+    fn = jax.jit(lambda p, i: bert4rec_score(p, i, cfg, top_k=10))
+    vals, idx = fn(params, items)
+    t0 = time.perf_counter()
+    reps = 20
+    for _ in range(reps):
+        vals, idx = fn(params, items)
+        jax.block_until_ready(vals)
+    dt = (time.perf_counter() - t0) / reps
+    print(f"scored {args.requests} users × {cfg.vocab} items → top-10 in "
+          f"{dt*1e3:.1f} ms/batch ({args.requests/dt:.0f} users/s)")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--requests", type=int, default=8)
+    ap.add_argument("--prompt-len", type=int, default=16)
+    ap.add_argument("--max-new", type=int, default=16)
+    args = ap.parse_args()
+    spec = get_arch(args.arch)
+    if spec.family == "lm":
+        serve_lm(spec, args)
+    elif spec.family == "recsys":
+        serve_recsys(spec, args)
+    else:
+        raise SystemExit(f"{args.arch} ({spec.family}) has no serving mode")
+
+
+if __name__ == "__main__":
+    main()

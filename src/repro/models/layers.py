@@ -1,0 +1,199 @@
+"""Shared neural-net layers (pure JAX, explicit param pytrees, no flax).
+
+Covers everything the assigned LM architectures need: RMSNorm, RoPE, GQA
+attention with sliding-window / logit-softcap / local-global patterns,
+SwiGLU / GeGLU MLPs, tied embeddings.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.dist.sharding import shard
+from repro.kernels.flash_attention.ops import attention as attn_op
+
+__all__ = [
+    "RMSNormP", "rms_norm", "rope", "init_dense", "dense",
+    "init_attention", "attention_block", "decode_attention_block",
+    "init_mlp", "mlp_block", "cross_entropy_loss",
+]
+
+Array = jnp.ndarray
+
+
+# --------------------------------------------------------------------- #
+# basics
+# --------------------------------------------------------------------- #
+def rms_norm(x: Array, gamma: Array, eps: float = 1e-6, plus_one: bool = False) -> Array:
+    var = jnp.mean(jnp.square(x.astype(jnp.float32)), axis=-1, keepdims=True)
+    y = x.astype(jnp.float32) * jax.lax.rsqrt(var + eps)
+    g = (1.0 + gamma) if plus_one else gamma  # gemma uses (1+w)
+    return (y * g).astype(x.dtype)
+
+
+def rope(x: Array, positions: Array, theta: float = 10000.0) -> Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (..., S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    angles = angles[..., None, :]  # broadcast over heads
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+def init_dense(key, d_in: int, d_out: int, scale: Optional[float] = None) -> Array:
+    scale = scale if scale is not None else d_in ** -0.5
+    return jax.random.normal(key, (d_in, d_out), jnp.float32) * scale
+
+
+def dense(x: Array, w: Array) -> Array:
+    return jnp.einsum("...i,io->...o", x, w)
+
+
+def cross_entropy_loss(logits: Array, labels: Array, mask: Optional[Array] = None,
+                       softcap: float = 0.0) -> Array:
+    """Mean next-token CE.  logits (..., V) fp32; labels int (...,)."""
+    logits = logits.astype(jnp.float32)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - gold
+    if mask is not None:
+        return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    return nll.mean()
+
+
+# --------------------------------------------------------------------- #
+# attention (GQA + RoPE + sliding window + softcap)
+# --------------------------------------------------------------------- #
+@dataclasses.dataclass(frozen=True)
+class AttnCfg:
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+    rope_theta: float = 10000.0
+    window: int = 0  # 0 = global
+    softcap: float = 0.0
+    causal: bool = True
+    scale: Optional[float] = None  # None → head_dim**-0.5
+
+
+def init_attention(key, cfg: AttnCfg) -> dict:
+    ks = jax.random.split(key, 4)
+    d, H, Hk, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.head_dim
+    return {
+        "wq": jax.random.normal(ks[0], (d, H, hd), jnp.float32) * d ** -0.5,
+        "wk": jax.random.normal(ks[1], (d, Hk, hd), jnp.float32) * d ** -0.5,
+        "wv": jax.random.normal(ks[2], (d, Hk, hd), jnp.float32) * d ** -0.5,
+        "wo": jax.random.normal(ks[3], (H, hd, d), jnp.float32) * (H * hd) ** -0.5,
+    }
+
+
+def _qkv(params, x, positions, cfg: AttnCfg):
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(x.dtype))
+    k = jnp.einsum("bsd,dhk->bshk", x, params["wk"].astype(x.dtype))
+    v = jnp.einsum("bsd,dhk->bshk", x, params["wv"].astype(x.dtype))
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attention_block(
+    params: dict,
+    x: Array,  # (B, S, d)
+    positions: Array,  # (B, S)
+    cfg: AttnCfg,
+    backend: str = "xla",
+) -> Array:
+    q, k, v = _qkv(params, x, positions, cfg)
+    q = shard(jnp.swapaxes(q, 1, 2), "batch", "heads", "seq", None)  # (B,H,S,hd)
+    k = shard(jnp.swapaxes(k, 1, 2), "batch", "kv_heads", "seq", None)
+    v = shard(jnp.swapaxes(v, 1, 2), "batch", "kv_heads", "seq", None)
+    o = attn_op(
+        q, k, v,
+        scale=cfg.scale, causal=cfg.causal, window=cfg.window,
+        softcap=cfg.softcap, backend=backend,
+    )
+    o = jnp.swapaxes(o, 1, 2)  # (B, S, H, hd)
+    return jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+
+
+def decode_attention_block(
+    params: dict,
+    x: Array,  # (B, 1, d) — one new token
+    pos: Array,  # scalar int32 — current position
+    k_cache: Array,  # (B, Hkv, S_max, hd)
+    v_cache: Array,
+    cfg: AttnCfg,
+) -> tuple[Array, Array, Array]:
+    """One decode step against a KV cache (serve_step hot path).
+
+    Sliding-window layers keep a ring buffer: the cache holds only
+    ``min(window, S_max)`` positions and the write index wraps."""
+    B = x.shape[0]
+    positions = jnp.full((B, 1), pos, jnp.int32)
+    q, k_new, v_new = _qkv(params, x, positions, cfg)
+    q = jnp.swapaxes(q, 1, 2)  # (B, H, 1, hd)
+    k_new = jnp.swapaxes(k_new, 1, 2)  # (B, Hkv, 1, hd)
+    v_new = jnp.swapaxes(v_new, 1, 2)
+    S_max = k_cache.shape[2]
+    write_idx = jnp.where(S_max > 0, pos % S_max, 0)
+    k_cache = jax.lax.dynamic_update_slice(k_cache, k_new.astype(k_cache.dtype), (0, 0, write_idx, 0))
+    v_cache = jax.lax.dynamic_update_slice(v_cache, v_new.astype(v_cache.dtype), (0, 0, write_idx, 0))
+    # positions of cache slots (ring-aware): slot i holds absolute position
+    #   i                      if pos < S_max   (not yet wrapped)
+    #   pos - ((write_idx - i) mod S_max)       after wrapping
+    slots = jnp.arange(S_max, dtype=jnp.int32)
+    abs_pos = pos - jnp.mod(write_idx - slots, S_max)
+    valid = (abs_pos >= 0) & (abs_pos <= pos)
+    if cfg.window > 0:
+        valid &= (pos - abs_pos) < cfg.window
+    group = cfg.n_heads // cfg.n_kv_heads
+    kc = jnp.repeat(k_cache, group, axis=1).astype(jnp.float32)
+    vc = jnp.repeat(v_cache, group, axis=1).astype(jnp.float32)
+    scale = cfg.scale if cfg.scale is not None else cfg.head_dim ** -0.5
+    s = jnp.einsum("bhqk,bhsk->bhqs", q.astype(jnp.float32) * scale, kc)
+    if cfg.softcap > 0.0:
+        s = cfg.softcap * jnp.tanh(s / cfg.softcap)
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhqs,bhsk->bhqk", p, vc).astype(x.dtype)
+    o = jnp.swapaxes(o, 1, 2)  # (B, 1, H, hd)
+    out = jnp.einsum("bshk,hkd->bsd", o, params["wo"].astype(x.dtype))
+    return out, k_cache, v_cache
+
+
+# --------------------------------------------------------------------- #
+# MLP (SwiGLU / GeGLU / plain GELU)
+# --------------------------------------------------------------------- #
+def init_mlp(key, d_model: int, d_ff: int, kind: str = "swiglu") -> dict:
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_up": init_dense(ks[0], d_model, d_ff),
+        "w_down": init_dense(ks[1], d_ff, d_model),
+    }
+    if kind in ("swiglu", "geglu"):
+        p["w_gate"] = init_dense(ks[2], d_model, d_ff)
+    return p
+
+
+def mlp_block(params: dict, x: Array, kind: str = "swiglu") -> Array:
+    up = dense(x, params["w_up"].astype(x.dtype))
+    if kind == "swiglu":
+        gate = jax.nn.silu(dense(x, params["w_gate"].astype(x.dtype)))
+        h = gate * up
+    elif kind == "geglu":
+        gate = jax.nn.gelu(dense(x, params["w_gate"].astype(x.dtype)), approximate=True)
+        h = gate * up
+    else:  # gelu
+        h = jax.nn.gelu(up, approximate=True)
+    h = shard(h, "batch", "seq", "mlp")
+    return dense(h, params["w_down"].astype(x.dtype))

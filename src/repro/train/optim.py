@@ -1,0 +1,214 @@
+"""Optimizers from scratch (optax is not installed in this container).
+
+Minimal gradient-transform algebra: a ``Transform`` has ``init(params)`` and
+``update(grads, state, params)``; ``chain`` composes.  Provided: AdamW, SGD
+(+momentum), Adafactor (factored second moment — the memory-efficient choice
+for 100B-param meshes), global-norm clipping, LR schedules.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "Transform", "chain", "scale", "scale_by_schedule", "clip_by_global_norm",
+    "adam_moments", "add_decayed_weights", "adamw", "sgd", "adafactor",
+    "cosine_schedule", "linear_warmup", "constant_schedule", "apply_updates",
+    "global_norm",
+]
+
+
+class Transform(NamedTuple):
+    init: Callable
+    update: Callable  # (grads, state, params) -> (updates, state)
+
+
+def chain(*ts: Transform) -> Transform:
+    def init(params):
+        return tuple(t.init(params) for t in ts)
+
+    def update(grads, state, params):
+        new_state = []
+        for t, s in zip(ts, state):
+            grads, s = t.update(grads, s, params)
+            new_state.append(s)
+        return grads, tuple(new_state)
+
+    return Transform(init, update)
+
+
+def global_norm(tree) -> jnp.ndarray:
+    return jnp.sqrt(
+        sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in jax.tree.leaves(tree))
+    )
+
+
+def clip_by_global_norm(max_norm: float) -> Transform:
+    def init(params):
+        return ()
+
+    def update(grads, state, params):
+        norm = global_norm(grads)
+        factor = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        return jax.tree.map(lambda g: g * factor, grads), state
+
+    return Transform(init, update)
+
+
+def scale(factor: float) -> Transform:
+    return Transform(
+        lambda p: (),
+        lambda g, s, p: (jax.tree.map(lambda x: x * factor, g), s),
+    )
+
+
+def scale_by_schedule(schedule: Callable) -> Transform:
+    def init(params):
+        return jnp.zeros((), jnp.int32)
+
+    def update(grads, count, params):
+        lr = schedule(count)
+        return jax.tree.map(lambda g: g * -lr, grads), count + 1
+
+    return Transform(init, update)
+
+
+def adam_moments(b1: float = 0.9, b2: float = 0.999, eps: float = 1e-8) -> Transform:
+    def init(params):
+        zeros = lambda: jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+        return {"mu": zeros(), "nu": zeros(), "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        mu = jax.tree.map(lambda m, g: b1 * m + (1 - b1) * g.astype(jnp.float32),
+                          state["mu"], grads)
+        nu = jax.tree.map(
+            lambda v, g: b2 * v + (1 - b2) * jnp.square(g.astype(jnp.float32)),
+            state["nu"], grads)
+        bc1 = 1 - b1 ** c.astype(jnp.float32)
+        bc2 = 1 - b2 ** c.astype(jnp.float32)
+        upd = jax.tree.map(
+            lambda m, v: (m / bc1) / (jnp.sqrt(v / bc2) + eps), mu, nu)
+        return upd, {"mu": mu, "nu": nu, "count": c}
+
+    return Transform(init, update)
+
+
+def add_decayed_weights(weight_decay: float) -> Transform:
+    def update(grads, state, params):
+        if weight_decay == 0.0 or params is None:
+            return grads, state
+        return jax.tree.map(
+            lambda g, p: g + weight_decay * p.astype(g.dtype), grads, params
+        ), state
+
+    return Transform(lambda p: (), update)
+
+
+def adamw(schedule, b1=0.9, b2=0.999, eps=1e-8, weight_decay=0.01,
+          max_grad_norm: Optional[float] = 1.0) -> Transform:
+    parts = []
+    if max_grad_norm:
+        parts.append(clip_by_global_norm(max_grad_norm))
+    parts += [adam_moments(b1, b2, eps), add_decayed_weights(weight_decay),
+              scale_by_schedule(schedule)]
+    return chain(*parts)
+
+
+def sgd(schedule, momentum: float = 0.9) -> Transform:
+    def init(params):
+        return jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params)
+
+    def update(grads, vel, params):
+        vel = jax.tree.map(lambda v, g: momentum * v + g.astype(jnp.float32),
+                           vel, grads)
+        return vel, vel
+
+    return chain(Transform(init, update), scale_by_schedule(schedule))
+
+
+def adafactor(schedule, eps: float = 1e-30, clip_threshold: float = 1.0,
+              decay: float = 0.8) -> Transform:
+    """Factored second moment: O(rows+cols) optimizer memory for matrices —
+    the memory-efficient choice at 10¹¹-param scale."""
+
+    def _factored(p):
+        return p.ndim >= 2
+
+    def init(params):
+        def per(p):
+            if _factored(p):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros_like(p, jnp.float32)}
+
+        return {"m": jax.tree.map(per, params),
+                "count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params):
+        c = state["count"] + 1
+        beta = 1.0 - c.astype(jnp.float32) ** -decay
+
+        def per(g, s):
+            g32 = g.astype(jnp.float32)
+            g2 = jnp.square(g32) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(-2)
+                denom = jnp.maximum(vr.mean(-1, keepdims=True), eps)
+                precond = (vr / denom)[..., None] * vc[..., None, :]
+                upd = g32 / jnp.sqrt(jnp.maximum(precond, eps))
+                new_s = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                upd = g32 / jnp.sqrt(jnp.maximum(v, eps))
+                new_s = {"v": v}
+            rms = jnp.sqrt(jnp.mean(jnp.square(upd)) + 1e-12)
+            upd = upd / jnp.maximum(1.0, rms / clip_threshold)
+            return upd, new_s
+
+        flat_u, flat_s = [], []
+        leaves_g, tdef = jax.tree.flatten(grads)
+        leaves_s = tdef.flatten_up_to(state["m"])
+        for g, s in zip(leaves_g, leaves_s):
+            u, ns = per(g, s)
+            flat_u.append(u)
+            flat_s.append(ns)
+        return (
+            jax.tree.unflatten(tdef, flat_u),
+            {"m": jax.tree.unflatten(tdef, flat_s), "count": c},
+        )
+
+    return chain(Transform(init, update), scale_by_schedule(schedule))
+
+
+# ---------------------------- schedules ---------------------------- #
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    final_frac: float = 0.1) -> Callable:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / jnp.maximum(warmup_steps, 1)
+        t = jnp.clip((step - warmup_steps) / jnp.maximum(total_steps - warmup_steps, 1), 0, 1)
+        cos = peak_lr * (final_frac + (1 - final_frac) * 0.5 * (1 + jnp.cos(jnp.pi * t)))
+        return jnp.where(step < warmup_steps, warm, cos)
+
+    return fn
+
+
+def linear_warmup(peak_lr: float, warmup_steps: int) -> Callable:
+    return lambda step: peak_lr * jnp.minimum(
+        1.0, step.astype(jnp.float32) / max(warmup_steps, 1))
+
+
+def constant_schedule(lr: float) -> Callable:
+    return lambda step: jnp.asarray(lr, jnp.float32)
+
+
+def apply_updates(params, updates):
+    return jax.tree.map(lambda p, u: (p.astype(jnp.float32) + u).astype(p.dtype),
+                        params, updates)

@@ -1,0 +1,211 @@
+"""Per-arch smoke tests (assignment: reduced config, one forward/train step
+on CPU, assert output shapes + no NaNs) + model-level invariants."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCHS, get_arch
+from repro.models import transformer as tfm
+from repro.models import bert4rec as b4r
+from repro.models.gnn import GraphBatch, gnn_loss_fn, gnn_forward, init_gnn
+
+KEY = jax.random.PRNGKey(0)
+LM_ARCHS = [a for a, s in ARCHS.items() if s.family == "lm"]
+GNN_ARCHS = [a for a, s in ARCHS.items() if s.family == "gnn"]
+
+
+def _no_nan(tree):
+    return not any(bool(jnp.isnan(x).any()) for x in jax.tree.leaves(tree))
+
+
+# ------------------------------- LM smoke ------------------------------- #
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_train_step(arch):
+    cfg = get_arch(arch).make_smoke_cfg()
+    params = tfm.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 33), 0, cfg.vocab)
+    (loss, metrics), grads = jax.value_and_grad(
+        lambda p: tfm.loss_fn(p, {"tokens": tokens}, cfg), has_aux=True)(params)
+    assert loss.shape == () and float(loss) > 0
+    assert _no_nan(grads) and _no_nan(loss)
+
+
+@pytest.mark.parametrize("arch", LM_ARCHS)
+def test_lm_smoke_decode(arch):
+    cfg = get_arch(arch).make_smoke_cfg()
+    params = tfm.init_params(cfg, KEY)
+    B, horizon = 2, 64
+    cache = tfm.init_cache(cfg, B, horizon)
+    tok = jax.random.randint(KEY, (B, 1), 0, cfg.vocab)
+    logits, cache = tfm.serve_decode(params, tok, jnp.int32(3), cache, cfg)
+    assert logits.shape == (B, cfg.vocab)
+    assert _no_nan(logits)
+
+
+@pytest.mark.parametrize("arch", ["tinyllama-1.1b", "gemma2-27b"])
+def test_lm_scan_equals_unrolled(arch):
+    """use_scan=True and False must be numerically identical — this is what
+    licenses the unrolled roofline pass."""
+    cfg = get_arch(arch).make_smoke_cfg()
+    params = tfm.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (2, 17), 0, cfg.vocab)
+    l1, _ = tfm.loss_fn(params, {"tokens": tokens}, cfg)
+    cfg2 = dataclasses.replace(cfg, use_scan=False)
+    l2, _ = tfm.loss_fn(params, {"tokens": tokens}, cfg2)
+    np.testing.assert_allclose(float(l1), float(l2), rtol=3e-4)
+
+
+def test_lm_prefill_matches_decode():
+    """Decoding token-by-token must match a prefill forward (KV cache
+    correctness, including the sliding-window ring buffer)."""
+    # fp32 + lossless dispatch (high capacity): prefill tokens can be
+    # capacity-dropped while single-token decode never is — the test's
+    # subject is cache correctness, not the drop policy
+    cfg = dataclasses.replace(
+        get_arch("mixtral-8x22b").make_smoke_cfg(), window=8,
+        compute_dtype="float32", capacity_factor=8.0)
+    params = tfm.init_params(cfg, KEY)
+    S = 24
+    tokens = jax.random.randint(KEY, (1, S), 0, cfg.vocab)
+    logits_full, _ = tfm.forward(params, tokens, cfg)
+    cache = tfm.init_cache(cfg, 1, horizon=S, dtype=jnp.float32)
+    outs = []
+    for t in range(S):
+        lg, cache = tfm.serve_decode(params, tokens[:, t:t + 1],
+                                     jnp.int32(t), cache, cfg)
+        outs.append(lg)
+    dec = jnp.stack(outs, axis=1)  # (1, S, V)
+    np.testing.assert_allclose(
+        np.asarray(dec), np.asarray(logits_full), rtol=1e-3, atol=1e-4)
+
+
+def test_moe_balanced_dispatch_no_drop():
+    """With capacity_factor ≥ E/topk·…, uniform tokens shouldn't be dropped:
+    output must differ from zero for every token."""
+    cfg = get_arch("granite-moe-3b-a800m").make_smoke_cfg()
+    params = tfm.init_params(cfg, KEY)
+    tokens = jax.random.randint(KEY, (4, 33), 0, cfg.vocab)
+    logits, aux = tfm.forward(params, tokens[:, :-1], cfg)
+    assert _no_nan(logits)
+    assert float(aux) > 0  # load-balance loss produced
+
+
+# ------------------------------- GNN smoke ------------------------------- #
+def _toy_batch(arch, d_in=8, n_classes=4):
+    rng = np.random.default_rng(0)
+    N, E = 40, 120
+    src = rng.integers(0, N, E).astype(np.int32)
+    dst = rng.integers(0, N, E).astype(np.int32)
+    kwargs = {}
+    if arch == "dimenet":
+        from repro.models.gnn import build_triplets
+        kj, ji, tm = build_triplets(src, dst, N, cap_per_edge=4)
+        kwargs = dict(
+            positions=jnp.asarray(rng.random((N, 3)).astype(np.float32) * 3),
+            t_kj=jnp.asarray(kj), t_ji=jnp.asarray(ji), t_mask=jnp.asarray(tm),
+            graph_ids=jnp.zeros(N, jnp.int32),
+        )
+        labels = jnp.asarray(rng.random(1), jnp.float32)
+    else:
+        labels = jnp.asarray(rng.integers(0, n_classes, N), jnp.int32)
+    return GraphBatch(
+        node_feat=jnp.asarray(rng.random((N, d_in)).astype(np.float32)),
+        edge_src=jnp.asarray(src), edge_dst=jnp.asarray(dst),
+        edge_mask=jnp.ones(E, bool), labels=labels,
+        node_mask=jnp.ones(N, bool), **kwargs)
+
+
+@pytest.mark.parametrize("arch", GNN_ARCHS)
+def test_gnn_smoke_train_step(arch):
+    spec = get_arch(arch)
+    cfg = spec.make_smoke_cfg()
+    cfg = dataclasses.replace(cfg, d_in=8,
+                              graph_level=(cfg.arch == "dimenet"))
+    batch = _toy_batch(cfg.arch)
+    params = init_gnn(KEY, cfg)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: gnn_loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert _no_nan(grads) and _no_nan(loss)
+
+
+@pytest.mark.parametrize("arch", ["gat", "gin", "sage"])
+def test_gnn_tocab_agg_equals_segment(arch):
+    from repro.core import build_blocked, from_edges
+    rng = np.random.default_rng(1)
+    batch = _toy_batch(arch)
+    g = from_edges(40, np.asarray(batch.edge_src), np.asarray(batch.edge_dst))
+    # NOTE: from_edges dedups nothing here but reorders — rebuild arrays in
+    # the blocked graph's edge order for a fair comparison
+    src, dst = g.edges()
+    batch = dataclasses.replace(
+        batch, edge_src=jnp.asarray(src, jnp.int32),
+        edge_dst=jnp.asarray(dst, jnp.int32),
+        edge_mask=jnp.ones(g.m, bool))
+    bg = build_blocked(g, block_size=8)
+    from repro.models.gnn import GNNConfig
+    cfg = GNNConfig(arch=arch, n_layers=2, d_in=8, d_hidden=8, n_classes=4,
+                    n_heads=2)
+    params = init_gnn(KEY, cfg)
+    out_flat = gnn_forward(params, batch, cfg, bg=None)
+    out_toc = gnn_forward(params, batch, cfg, bg=bg)
+    np.testing.assert_allclose(np.asarray(out_flat), np.asarray(out_toc),
+                               rtol=2e-4, atol=2e-5)
+
+
+# ------------------------------ recsys smoke ------------------------------ #
+def test_bert4rec_smoke_full_softmax():
+    cfg = get_arch("bert4rec").make_smoke_cfg()
+    assert not cfg.sampled_softmax
+    params = b4r.init_bert4rec(cfg, KEY)
+    rng = np.random.default_rng(0)
+    B, L = 4, cfg.max_len
+    items = jnp.asarray(rng.integers(0, cfg.vocab, (B, L)), jnp.int32)
+    mask = jnp.asarray(rng.random((B, L)) < 0.2)
+    batch = {"items": jnp.where(mask, cfg.mask_id, items), "labels": items,
+             "label_mask": mask.astype(jnp.float32)}
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: b4r.bert4rec_loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert _no_nan(grads) and float(loss) > 0
+
+
+def test_bert4rec_sampled_softmax_path():
+    cfg = dataclasses.replace(get_arch("bert4rec").make_smoke_cfg(),
+                              vocab=60_000, max_masked=4, num_negatives=32)
+    assert cfg.sampled_softmax
+    params = b4r.init_bert4rec(cfg, KEY)
+    rng = np.random.default_rng(0)
+    B, L, M, K = 4, cfg.max_len, 4, 32
+    batch = {
+        "items": jnp.asarray(rng.integers(0, cfg.vocab, (B, L)), jnp.int32),
+        "mask_pos": jnp.asarray(rng.integers(0, L, (B, M)), jnp.int32),
+        "pos_labels": jnp.asarray(rng.integers(0, cfg.vocab, (B, M)), jnp.int32),
+        "pos_weight": jnp.ones((B, M), jnp.float32),
+        "negatives": jnp.asarray(rng.integers(0, cfg.vocab, (K,)), jnp.int32),
+    }
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: b4r.bert4rec_loss_fn(p, batch, cfg), has_aux=True)(params)
+    assert _no_nan(grads) and float(loss) > 0
+
+
+def test_bert4rec_score_and_retrieve():
+    cfg = get_arch("bert4rec").make_smoke_cfg()
+    params = b4r.init_bert4rec(cfg, KEY)
+    items = jnp.zeros((3, cfg.max_len), jnp.int32)
+    vals, idx = b4r.bert4rec_score(params, items, cfg, top_k=10)
+    assert vals.shape == (3, 10) and idx.shape == (3, 10)
+    cands = jnp.arange(500, dtype=jnp.int32)
+    rv, ri = b4r.bert4rec_retrieve(params, items[:1], cands, cfg, top_k=7)
+    assert rv.shape == (7,) and _no_nan(rv)
+
+
+def test_binned_embedding_grad_equals_flat():
+    rng = np.random.default_rng(2)
+    ids = jnp.asarray(rng.integers(0, 321, (8, 16)), jnp.int32)
+    g = jnp.asarray(rng.random((8, 16, 8), dtype=np.float32))
+    a = b4r.binned_embedding_grad(ids, g, 321, num_bins=7)
+    ref = jax.ops.segment_sum(g.reshape(-1, 8), ids.reshape(-1),
+                              num_segments=321)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(ref), rtol=1e-6)

@@ -1,0 +1,143 @@
+"""End-to-end behaviour tests: training converges, serving works, the
+dry-run machinery compiles on a small in-process mesh."""
+import json
+import os
+import subprocess
+import sys
+import textwrap
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def test_lm_training_converges():
+    from repro.configs import get_arch
+    from repro.models.transformer import init_params, loss_fn
+    from repro.train.optim import adamw, cosine_schedule
+    from repro.train.trainer import Trainer
+    from repro.data.tokens import synthetic_lm_batches
+    import dataclasses
+
+    cfg = dataclasses.replace(get_arch("tinyllama-1.1b").make_smoke_cfg(),
+                              vocab=128)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    tr = Trainer(loss_fn=lambda p, b: loss_fn(p, b, cfg),
+                 optimizer=adamw(cosine_schedule(3e-3, 10, 80)))
+    p, s = tr.init_state(params)
+    batches = synthetic_lm_batches(8, 32, 128, seed=1)
+    _, _, hist = tr.run(p, s, batches, num_steps=80, log_every=79,
+                        log_fn=lambda *_: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] - 0.3
+
+
+def _gnn_step(params, state, batch, cfg, opt):
+    from repro.models.gnn import gnn_loss_fn
+    from repro.train.optim import apply_updates
+    (loss, m), grads = jax.value_and_grad(
+        lambda p: gnn_loss_fn(p, batch, cfg), has_aux=True)(params)
+    upd, state = opt.update(grads, state, params)
+    return apply_updates(params, upd), state, m["acc"]
+
+
+def test_gnn_training_converges():
+    from repro.data.graphs import cora_like
+    from repro.models.gnn import GNNConfig, init_gnn
+    from repro.train.optim import adamw, constant_schedule
+
+    g, batch = cora_like(n=300, m=1500, d_feat=32, n_classes=4, seed=1)
+    cfg = GNNConfig(arch="gat", n_layers=2, d_in=32, d_hidden=8,
+                    n_classes=4, n_heads=2)
+    params = init_gnn(jax.random.PRNGKey(0), cfg)
+    opt = adamw(constant_schedule(5e-3))
+    state = opt.init(params)
+    accs = []
+    step = jax.jit(lambda p, s: _gnn_step(p, s, batch, cfg, opt))
+    for _ in range(150):
+        params, state, acc = step(params, state)
+        accs.append(float(acc))
+    assert accs[-1] > 0.7  # planted signal is learnable
+
+
+def test_bert4rec_training_converges():
+    import dataclasses
+    from repro.configs import get_arch
+    from repro.models.bert4rec import bert4rec_loss_fn, init_bert4rec
+    from repro.data.recsys import synthetic_recsys_batches
+    from repro.train.optim import adamw, constant_schedule, apply_updates
+
+    cfg = dataclasses.replace(get_arch("bert4rec").make_smoke_cfg(),
+                              vocab=200, max_len=16)
+    params = init_bert4rec(cfg, jax.random.PRNGKey(0))
+    opt = adamw(constant_schedule(1e-2))
+    state = opt.init(params)
+    gen = synthetic_recsys_batches(32, 16, 200, cfg.mask_id, seed=0,
+                                   step_range=3)
+
+    @jax.jit
+    def step(params, state, batch):
+        (loss, _), grads = jax.value_and_grad(
+            lambda p: bert4rec_loss_fn(p, batch, cfg), has_aux=True)(params)
+        upd, state = opt.update(grads, state, params)
+        return apply_updates(params, upd), state, loss
+
+    losses = []
+    for _ in range(150):
+        params, state, loss = step(params, state, next(gen))
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.3
+
+
+def test_dryrun_machinery_small_mesh():
+    """The exact dryrun path (cells → jit → lower → compile → roofline) on
+    an 8-device subprocess mesh — proves the machinery end-to-end without
+    the 512-device cost."""
+    code = textwrap.dedent("""
+        import os
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        import json, jax
+        from repro.dist.sharding import use_mesh_rules
+        from repro.launch.cells import build_cell
+        from repro.launch.hlo_analysis import parse_collectives, roofline_terms
+        mesh = jax.make_mesh((4, 2), ("data", "model"))
+        with use_mesh_rules(mesh):
+            cell = build_cell("gat-cora", "full_graph_sm", mesh)
+            compiled = jax.jit(cell.fn).lower(*cell.args).compile()
+        cost = compiled.cost_analysis()
+        coll = parse_collectives(compiled.as_text(), 8)
+        rl = roofline_terms(cost["flops"] * 8, cost["bytes accessed"] * 8,
+                            coll, 8, model_flops=cell.model_flops)
+        print(json.dumps({
+            "flops": cost["flops"], "dominant": rl["dominant"],
+            "n_allreduce": coll.counts["all-reduce"],
+        }))
+    """)
+    env = dict(os.environ, PYTHONPATH=os.path.join(ROOT, "src"))
+    env.pop("XLA_FLAGS", None)
+    r = subprocess.run([sys.executable, "-c", code], env=env,
+                       capture_output=True, text=True, timeout=420)
+    assert r.returncode == 0, r.stderr[-3000:]
+    out = json.loads(r.stdout.strip().splitlines()[-1])
+    assert out["flops"] > 0
+    assert out["dominant"] in ("compute", "memory", "collective")
+    assert out["n_allreduce"] >= 1  # gradient reductions present
+
+
+def test_dryrun_results_all_green():
+    """The committed dry-run artifacts must show every non-skipped cell
+    compiling on both meshes (40 cells − 3 documented skips = 37 each)."""
+    d = os.path.join(ROOT, "experiments", "dryrun")
+    if not os.path.isdir(d):
+        pytest.skip("dry-run artifacts not generated yet")
+    recs = []
+    for f in os.listdir(d):
+        if f.endswith(".json"):
+            recs.append(json.load(open(os.path.join(d, f))))
+    for mesh in ("pod16x16", "pod2x16x16"):
+        ok = [r for r in recs if r["mesh"] == mesh and r["ok"]]
+        bad = [r for r in recs if r["mesh"] == mesh and not r["ok"]]
+        assert not bad, [(r["arch"], r["shape"], r.get("error")) for r in bad]
+        assert len(ok) >= 37, f"{mesh}: only {len(ok)} cells"
