@@ -1,4 +1,9 @@
-"""Shared benchmark utilities: graph suite + timing."""
+"""Shared benchmark utilities: graph suite, timing, structured records.
+
+``emit`` both prints the legacy CSV row *and* appends a structured record
+to ``RECORDS`` — the per-figure harness in ``benchmarks.run`` drains that
+list into a schema-versioned ``BENCH_<fig>.json`` via ``repro.obs.export``.
+"""
 from __future__ import annotations
 
 import time
@@ -6,6 +11,7 @@ import time
 import jax
 
 from repro.core import DeviceGraph, Graph, build_blocked, grid_graph, rmat_graph
+from repro.obs.metrics import registry as _obs
 
 # Scaled-down analogue of the paper's Table 2 suite (CPU container):
 # scale-free RMAT graphs with permuted ids (poor locality) + one
@@ -56,5 +62,32 @@ def timeit(fn, *args, reps: int = 3, warmup: int = 1, **kw) -> float:
     return ts[len(ts) // 2] * 1e6
 
 
-def emit(name: str, us: float, derived: str = ""):
+RECORDS: list = []  # structured rows of the currently-running figure
+
+
+def emit(name: str, us: float, **fields):
+    """Record one benchmark row.
+
+    Prints the legacy ``name,us_per_call,derived`` CSV line and appends
+    ``{"name", "us_per_call", **fields}`` to ``RECORDS``.  Numeric fields
+    also land in the process metric registry as ``bench.<field>`` gauges
+    labelled by record name, so exports tie benches to runtime counters."""
+    derived = ",".join(
+        f"{k}={v:.3g}" if isinstance(v, float) else f"{k}={v}"
+        for k, v in fields.items())
     print(f"{name},{us:.1f},{derived}")
+    rec = {"name": name, "us_per_call": us, **fields}
+    RECORDS.append(rec)
+    if us:
+        _obs.histogram("bench.us_per_call", "benchmark record runtimes") \
+            .observe(us, name=name)
+    for k, v in fields.items():
+        if isinstance(v, (int, float)) and not isinstance(v, bool):
+            _obs.gauge(f"bench.{k}", "benchmark derived field").set(v, name=name)
+
+
+def drain_records() -> list:
+    """Return and clear the structured rows accumulated since last drain."""
+    out = list(RECORDS)
+    RECORDS.clear()
+    return out

@@ -19,6 +19,14 @@ from .common import BLOCK_SIZE, SUITE, emit, get_graph, timeit
 
 PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
+# Which cache-model replay stream corresponds to each runtime PR variant
+# (push variants share base's sparse-global-write stream shape).
+_CACHE_VARIANT = {"base": "base", "push": "base", "cb": "cb",
+                  "gc-pull": "tocab", "gc-push": "tocab"}
+# Scaled LLC (|V|·4B / capacity matched to the paper's LiveJournal / 2.75MB).
+_MODEL_CFG = CacheConfig(capacity_bytes=64 * 1024, line_bytes=128, ways=16)
+_MODEL_BLOCK = 4096
+
 
 def _pr_iter_time(name, variant):
     g, dg, bg, bgp = get_graph(name)
@@ -30,13 +38,33 @@ def _pr_iter_time(name, variant):
     return timeit(fn, rank)
 
 
+_CACHE_SIM: dict = {}
+
+
+def _cache_counters(gname: str, variant: str) -> dict:
+    """Analytic cache-model counters for one (graph, runtime-variant)."""
+    cv = _CACHE_VARIANT[variant]
+    key = (gname, cv)
+    if key not in _CACHE_SIM:
+        g, *_ = get_graph(gname)
+        _CACHE_SIM[key] = simulate_pagerank_variant(
+            g, cv, _MODEL_CFG, block_size=_MODEL_BLOCK)
+    r = _CACHE_SIM[key]
+    return dict(miss_rate=r["miss_rate"], cache_misses=r["cache_misses"],
+                dram_per_edge=r["dram_per_edge"])
+
+
 def fig6_pagerank():
     """Fig. 6: PR per-iteration speedup over Base, per graph × variant."""
     for gname in SUITE:
+        g, *_ = get_graph(gname)
         base = _pr_iter_time(gname, "base")
         for v in PR_VARIANTS:
             us = base if v == "base" else _pr_iter_time(gname, v)
-            emit(f"fig6/pr/{gname}/{v}", us, f"speedup={base / us:.2f}x")
+            emit(f"fig6/pr/{gname}/{v}", us,
+                 speedup=base / us,
+                 edges_per_s=g.m / (us * 1e-6),
+                 **_cache_counters(gname, v))
 
 
 def fig7_spmv():
@@ -52,7 +80,8 @@ def fig7_spmv():
             times[v] = timeit(fn, x)
         for v, us in times.items():
             emit(f"fig7/spmv/{gname}/{v}", us,
-                 f"speedup={times['base'] / us:.2f}x")
+                 speedup=times["base"] / us,
+                 edges_per_s=g.m / (us * 1e-6))
 
 
 def fig8_bc():
@@ -61,9 +90,8 @@ def fig8_bc():
         g, dg, bg, _ = get_graph(gname)
         t_flat = timeit(lambda: bc(dg, None, jnp.int32(0)))
         t_toc = timeit(lambda: bc(dg, bg, jnp.int32(0)))
-        emit(f"fig8/bc/{gname}/flat", t_flat, "speedup=1.00x")
-        emit(f"fig8/bc/{gname}/graphcage", t_toc,
-             f"speedup={t_flat / t_toc:.2f}x")
+        emit(f"fig8/bc/{gname}/flat", t_flat, speedup=1.0)
+        emit(f"fig8/bc/{gname}/graphcage", t_toc, speedup=t_flat / t_toc)
 
 
 def fig9_cache_missrate():
@@ -75,7 +103,9 @@ def fig9_cache_missrate():
         for v in ("base", "cb", "tocab"):
             r = simulate_pagerank_variant(g, v, cfg, block_size=4096)
             emit(f"fig9/missrate/{gname}/{v}", 0.0,
-                 f"miss_rate={r['miss_rate']:.3f}")
+                 miss_rate=r["miss_rate"],
+                 cache_misses=r["cache_misses"],
+                 cache_accesses=r["cache_accesses"])
 
 
 def fig10_dram_per_edge():
@@ -87,8 +117,9 @@ def fig10_dram_per_edge():
         for v in ("base", "cb", "tocab"):
             r = simulate_pagerank_variant(g, v, cfg, block_size=4096)
             emit(f"fig10/dram_per_edge/{gname}/{v}", 0.0,
-                 f"dram_per_edge={r['dram_per_edge']:.3f},"
-                 f"vs_base={r['dram_per_edge'] / base['dram_per_edge']:.2f}")
+                 dram_per_edge=r["dram_per_edge"],
+                 dram_transactions=r["dram_transactions"],
+                 vs_base=r["dram_per_edge"] / base["dram_per_edge"])
 
 
 def fig11_blocksize_sweep():
@@ -106,7 +137,7 @@ def fig11_blocksize_sweep():
         us = timeit(fn, rank)
         r = simulate_pagerank_variant(g, "tocab", cfg, block_size=bs)
         emit(f"fig11/blocksize/{bs}", us,
-             f"blocks={r['num_blocks']},miss_rate={r['miss_rate']:.3f}")
+             blocks=r["num_blocks"], miss_rate=r["miss_rate"])
 
 
 def table3_framework_comparison():
@@ -115,7 +146,7 @@ def table3_framework_comparison():
     for gname in SUITE:
         for v in ("gc-pull", "gc-push", "base"):
             us = _pr_iter_time(gname, v)
-            emit(f"table3/pr_iter_ms/{gname}/{v}", us, f"ms={us / 1e3:.2f}")
+            emit(f"table3/pr_iter_ms/{gname}/{v}", us, ms=us / 1e3)
 
 
 def table4_partition_counts():
@@ -128,10 +159,10 @@ def table4_partition_counts():
         # CuSha CW format ≈ 2.5× CSR memory (paper §5)
         csr_bytes = 4 * (g.n + 1 + g.m * 2)
         emit(f"table4/partitions/{gname}", 0.0,
-             f"graphcage_subgraphs={gc_blocks},"
-             f"cusha_shards={-(-g.n // cusha_shard_vertices)},"
-             f"csr_mb={csr_bytes / 2**20:.1f},"
-             f"cusha_cw_mb={2.5 * csr_bytes / 2**20:.1f}")
+             graphcage_subgraphs=gc_blocks,
+             cusha_shards=-(-g.n // cusha_shard_vertices),
+             csr_mb=csr_bytes / 2**20,
+             cusha_cw_mb=2.5 * csr_bytes / 2**20)
 
 
 def ablation_blocking():
@@ -158,7 +189,7 @@ def ablation_blocking():
         for name, fn in runs.items():
             us = timeit(fn, x)
             emit(f"ablation/blocking/{gname}/{name}", us,
-                 f"blocks={blocks[name]}")
+                 blocks=blocks[name])
 
 
 ALL = [fig6_pagerank, fig7_spmv, fig8_bc, fig9_cache_missrate,

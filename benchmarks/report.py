@@ -12,6 +12,8 @@ ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 def _load(d):
     recs = []
     p = os.path.join(ROOT, "experiments", d)
+    if not os.path.isdir(p):
+        return recs
     for f in sorted(os.listdir(p)):
         if f.endswith(".json"):
             recs.append(json.load(open(os.path.join(p, f))))
@@ -58,8 +60,23 @@ def roofline_table() -> str:
     return "\n".join(lines)
 
 
+def bench_tables() -> str:
+    """Render every BENCH_*.json under experiments/bench via repro.obs."""
+    from repro.obs.report import render
+    p = os.path.join(ROOT, "experiments", "bench")
+    if not os.path.isdir(p):
+        return "(no experiments/bench artifacts — run benchmarks.run first)"
+    out = []
+    for f in sorted(os.listdir(p)):
+        if f.startswith("BENCH_") and f.endswith(".json"):
+            out.append(render(json.load(open(os.path.join(p, f)))))
+    return "\n\n".join(out) or "(no BENCH_*.json artifacts)"
+
+
 if __name__ == "__main__":
     print("## Dry-run matrix\n")
     print(dryrun_table())
     print("\n## Roofline table (single-pod 16x16)\n")
     print(roofline_table())
+    print("\n## Paper-figure benches\n")
+    print(bench_tables())

@@ -40,6 +40,8 @@ def _measure(arch_id, shape_name, mesh, overrides=None):
         compiled = jax.jit(cell.fn).lower(*cell.args).compile()
     n = mesh.devices.size
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, list):  # jax < 0.5 returns [dict]
+        cost = cost[0] if cost else {}
     coll = parse_collectives(compiled.as_text(), n)
     return {
         "flops": float(cost.get("flops", 0.0)) * n,

@@ -26,6 +26,7 @@ from typing import Callable, Optional
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import registry as _obs
 from .graph import DeviceGraph
 from .partition import REDUCE_IDENTITY, BlockedGraph
 
@@ -38,7 +39,40 @@ __all__ = [
     "tocab_push",
     "tocab_pull_partials",
     "reduce_partials",
+    "timed",
 ]
+
+
+def _record_engine(engine: str, direction: str, blocks: int, edges: int):
+    """Trace-time telemetry: fires once per (re)trace — shapes and block
+    counts are static, so this is jit-safe and costs nothing at runtime.
+    A growing ``engine_traces`` count on a steady workload is itself a
+    signal (retrace churn)."""
+    _obs.counter(
+        "tocab.engine_traces", "engine (re)traces by name/direction"
+    ).inc(engine=engine, direction=direction)
+    _obs.gauge("tocab.blocks", "subgraphs per blocked engine trace").set(
+        blocks, engine=engine)
+    _obs.gauge("tocab.edges", "edges per engine trace").set(
+        edges, engine=engine)
+
+
+def timed(engine_fn, graph, *args, engine: str = None, **kw):
+    """Synchronously run one engine call, recording wall time and edges/s.
+
+    ``graph`` is the DeviceGraph / BlockedGraph first argument; edges come
+    from its static ``m``.  Returns the (blocked-until-ready) result."""
+    import time
+
+    name = engine or getattr(engine_fn, "__name__", "engine")
+    t0 = time.perf_counter()
+    out = jax.block_until_ready(engine_fn(graph, *args, **kw))
+    dt = time.perf_counter() - t0
+    _obs.histogram("tocab.call_seconds", "engine wall time").observe(
+        dt, engine=name)
+    _obs.gauge("tocab.edges_per_s", "engine throughput").set(
+        graph.m / max(dt, 1e-12), engine=name)
+    return out
 
 _SEG_FNS = {
     "sum": jax.ops.segment_sum,
@@ -87,6 +121,7 @@ def baseline_pull(
 
     Flat segment reduce by destination — the unblocked hand-optimized
     reference (random reads of ``values`` span the full array)."""
+    _record_engine("baseline_pull", "pull", 1, dg.m)
     mask = jnp.ones(dg.src.shape, dtype=bool)
     msgs = _edge_messages(values, dg.src, dg.vals, mask, reduce, combine)
     return segment_reduce(msgs, dg.dst, dg.n, reduce)
@@ -102,6 +137,7 @@ def baseline_push(
     """Push direction: scatter values[src] to every out-neighbour.  On TPU
     there are no atomics — the scatter is realized as a segment reduce, i.e.
     push ≡ pull with the read side sequential (src-sorted edges)."""
+    _record_engine("baseline_push", "push", 1, dg.m)
     mask = jnp.ones(dg.src.shape, dtype=bool)
     msgs = _edge_messages(values, dg.src, dg.vals, mask, reduce, combine)
     return segment_reduce(msgs, dg.dst, dg.n, reduce)
@@ -120,6 +156,7 @@ def cb_pull(
     """Column blocking only: gathers are window-confined but every block
     writes partials at global width (repeated sparse access to ``sums``)."""
     assert bg.direction == "pull"
+    _record_engine("cb_pull", "pull", bg.num_blocks, bg.m)
     src_global = bg.window_idx + bg.window_lo()[:, None]
     msgs = _edge_messages(values, src_global, bg.edge_vals, bg.edge_mask, reduce, combine)
     # id_map lookup per edge: id_map[b, compact_idx[b,e]]
@@ -198,6 +235,7 @@ def tocab_pull(
     reduce: str = "sum",
     combine: Optional[Callable] = None,
 ):
+    _record_engine("tocab_pull", "pull", bg.num_blocks, bg.m)
     partials = tocab_pull_partials(bg, values, reduce, combine)
     return reduce_partials(bg, partials, reduce)
 
@@ -214,6 +252,7 @@ def tocab_push(
     (block_contrib slab), then fanned out per edge; accumulation is confined
     to the block's destination window (conflict-free, no atomics on TPU)."""
     assert bg.direction == "push"
+    _record_engine("tocab_push", "push", bg.num_blocks, bg.m)
     # Gather each unique source's value once per block (the data-reuse win).
     block_contrib = jnp.take(values, bg.id_map, axis=0, mode="fill", fill_value=0)
     msgs = jnp.take_along_axis(

@@ -14,12 +14,14 @@ the frontier's out-edge count.
 """
 from __future__ import annotations
 
+import os
 from functools import partial
 from typing import Optional
 
 import jax
 import jax.numpy as jnp
 
+from repro.obs.metrics import registry as _obs
 from .graph import DeviceGraph
 from .partition import BlockedGraph
 from . import tocab
@@ -27,6 +29,39 @@ from . import tocab
 __all__ = ["bfs", "bc", "sssp", "connected_components", "INF_DEPTH"]
 
 INF_DEPTH = jnp.iinfo(jnp.int32).max // 2
+
+
+def _callbacks_enabled() -> bool:
+    """Per-iteration telemetry uses ``jax.debug.callback`` (a host call per
+    loop iteration).  On by default — the CPU-scale graphs don't notice —
+    and trace-time gated off with REPRO_OBS_DEVICE_CALLBACKS=0 for
+    device-bound runs."""
+    return os.environ.get("REPRO_OBS_DEVICE_CALLBACKS", "1") != "0"
+
+
+def _record_frontier(algo, frontier_size, frontier_edges, use_pull):
+    direction = "pull" if bool(use_pull) else "push"
+    _obs.histogram(
+        "traversal.frontier_size", "active vertices per iteration"
+    ).observe(float(frontier_size), algo=algo)
+    _obs.histogram(
+        "traversal.frontier_edges", "frontier out-edge volume (Beamer m_f)"
+    ).observe(float(frontier_edges), algo=algo)
+    _obs.counter(
+        "traversal.iterations", "iterations by Beamer direction decision"
+    ).inc(algo=algo, direction=direction)
+
+
+def _record_iteration(algo):
+    _obs.counter("traversal.iterations", "").inc(algo=algo, direction="pull")
+
+
+def _emit_frontier(algo: str, frontier, m_frontier, use_pull):
+    """Trace-time-gated per-iteration telemetry (runtime values arrive on
+    the host via debug.callback)."""
+    if _callbacks_enabled():
+        jax.debug.callback(partial(_record_frontier, algo),
+                           frontier.sum(), m_frontier, use_pull)
 
 
 def _frontier_reach(
@@ -78,6 +113,7 @@ def bfs(
         # Beamer heuristic: frontier out-edge volume vs m/alpha.
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
+        _emit_frontier("bfs", frontier, m_frontier, use_pull)
         reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
@@ -121,6 +157,7 @@ def bc(
         depth, sigma, frontier, level = state
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
+        _emit_frontier("bc", frontier, m_frontier, use_pull)
         reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
@@ -184,6 +221,8 @@ def sssp(
 
     def body(state):
         dist, _, it = state
+        if _callbacks_enabled():
+            jax.debug.callback(partial(_record_iteration, "sssp"))
         relaxed = (
             tocab.tocab_pull(bg_pull, dist, reduce="min", combine=plus)
             if bg_pull is not None
@@ -228,6 +267,8 @@ def connected_components(
 
     def body(state):
         labels, _, it = state
+        if _callbacks_enabled():
+            jax.debug.callback(partial(_record_iteration, "cc"))
         new = relax(labels)
         return new, jnp.any(new < labels), it + 1
 

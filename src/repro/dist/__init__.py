@@ -1,0 +1,8 @@
+"""Distribution layer: logical-axis sharding rules, hand-rolled collectives,
+and elastic mesh construction.
+
+Everything degrades gracefully to single-device: off-mesh, ``shard`` is the
+identity, ``current_mesh()`` is ``None``, and the collectives fall back to
+their flat (non-distributed) equivalents.
+"""
+from . import collectives, elastic, sharding  # noqa: F401

@@ -1,0 +1,103 @@
+"""Hand-rolled collectives: two-stage distributed top-k, a ppermute ring
+all-reduce, and error-feedback-compressed data-parallel gradients.
+
+These are the §Perf mechanisms referenced from the serving path
+(``bert4rec_score`` → :func:`distributed_topk`) and the multi-pod training
+story (:func:`make_dp_grad_fn` keeps the cross-pod wire format bf16 with an
+error-feedback residual so compression noise doesn't accumulate)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+__all__ = [
+    "distributed_topk",
+    "ring_all_reduce",
+    "init_error_feedback",
+    "make_dp_grad_fn",
+]
+
+
+def distributed_topk(scores: jnp.ndarray, k: int, mesh: Mesh,
+                     axis: str = "model"):
+    """Exact two-stage top-k over the vocab/item axis of ``scores`` (B, V).
+
+    Stage 1 takes a local top-k inside each ``axis`` shard (no collective);
+    stage 2 reduces the S·k candidates — so the all-gather moves S·k values
+    per row instead of V.  Bitwise-identical to ``jax.lax.top_k`` including
+    tie-breaking (lower index wins), because per-shard candidates keep index
+    order and shards are concatenated in index order."""
+    B, V = scores.shape
+    shards = dict(mesh.shape).get(axis, 1)
+    if shards <= 1 or V % shards:
+        return jax.lax.top_k(scores, k)
+    v_local = V // shards
+    kk = min(k, v_local)
+    blocked = scores.reshape(B, shards, v_local)
+    loc_v, loc_i = jax.lax.top_k(blocked, kk)  # (B, S, kk)
+    offs = (jnp.arange(shards, dtype=jnp.int32) * v_local)[None, :, None]
+    cand_v = loc_v.reshape(B, shards * kk)
+    cand_i = (loc_i + offs).reshape(B, shards * kk)
+    top_v, pos = jax.lax.top_k(cand_v, k)
+    top_i = jnp.take_along_axis(cand_i, pos, axis=1)
+    return top_v, top_i
+
+
+def ring_all_reduce(x: jnp.ndarray, axis: str, num_shards: int):
+    """Sum all-reduce as ``num_shards - 1`` neighbour ppermutes (the
+    bandwidth-optimal ring schedule, unrolled).  shard_map-internal; must
+    equal ``lax.psum(x, axis)``."""
+    perm = [(i, (i + 1) % num_shards) for i in range(num_shards)]
+    acc = x
+    for _ in range(num_shards - 1):
+        x = jax.lax.ppermute(x, axis, perm)
+        acc = acc + x
+    return acc
+
+
+def init_error_feedback(params, num_shards: int):
+    """Per-shard fp32 residual tree for compressed gradients (leading axis =
+    shard).  Starts at zero: the first step's residual is the bf16 error."""
+    return jax.tree.map(
+        lambda p: jnp.zeros((num_shards,) + p.shape, jnp.float32), params)
+
+
+def make_dp_grad_fn(loss_fn: Callable, mesh: Mesh, axis: str,
+                    compress: bool = True):
+    """Data-parallel gradient fn over mesh ``axis`` with optional bf16
+    compression + error feedback.
+
+    Returns ``fn(params, batch, residuals) -> (grads, residuals, loss)``:
+    batch and residual leaves carry a leading shard axis sized
+    ``mesh.shape[axis]``; grads and loss come back replicated (pmean'd)."""
+    num_shards = dict(mesh.shape)[axis]
+
+    def local(params, batch, res):
+        mb = jax.tree.map(lambda x: x[0], batch)  # drop the shard axis
+        (loss, _aux), grads = jax.value_and_grad(
+            loss_fn, has_aux=True)(params, mb)
+        loss = jax.lax.pmean(loss, axis)
+        if not compress:
+            grads = jax.tree.map(lambda g: jax.lax.pmean(g, axis), grads)
+            return grads, res, loss
+        # error feedback: add the residual before quantizing, keep the
+        # quantization error as the next residual (so it is re-sent, not lost)
+        corrected = jax.tree.map(
+            lambda g, r: g.astype(jnp.float32) + r[0], grads, res)
+        wire = jax.tree.map(lambda v: v.astype(jnp.bfloat16), corrected)
+        new_res = jax.tree.map(
+            lambda v, w: (v - w.astype(jnp.float32))[None], corrected, wire)
+        grads = jax.tree.map(
+            lambda w: jax.lax.pmean(w.astype(jnp.float32), axis), wire)
+        return grads, new_res, loss
+
+    return shard_map(
+        local, mesh=mesh,
+        in_specs=(P(), P(axis), P(axis)),
+        out_specs=(P(), P(axis), P()),
+        check_rep=False,
+    )

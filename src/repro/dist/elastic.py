@@ -1,0 +1,47 @@
+"""Elastic meshes: build a (data, model) mesh from whatever devices exist
+right now, and re-place arrays onto a different mesh (restore-after-resize).
+
+The checkpoint layer is mesh-agnostic (host numpy); elasticity is just
+"restore with the new mesh's shardings" — :func:`reshard` is the in-memory
+version of the same move."""
+from __future__ import annotations
+
+from typing import Optional, Sequence
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = ["make_mesh_for", "reshard"]
+
+
+def make_mesh_for(num_devices: Optional[int] = None,
+                  axes: Sequence[str] = ("data", "model"),
+                  model_parallel: int = 1) -> Mesh:
+    """Mesh over the first ``num_devices`` devices (default: all).
+
+    ``model_parallel`` is clamped to a divisor of the device count; the
+    remainder goes to the data axis — on an elastic resize the same call
+    yields the best mesh the surviving devices support."""
+    devs = jax.devices()
+    n = len(devs) if num_devices is None else min(num_devices, len(devs))
+    devs = devs[:n]
+    mp = max(1, model_parallel)
+    while n % mp:
+        mp -= 1
+    shape = (n // mp, mp)
+    return Mesh(np.array(devs).reshape(shape), tuple(axes))
+
+
+def reshard(tree, mesh: Mesh, specs=None):
+    """Re-place every leaf of ``tree`` onto ``mesh``.
+
+    ``specs`` may be a matching tree of PartitionSpecs, a single spec, or
+    None (replicate).  Works across meshes of different sizes — the elastic
+    restore path with no disk round-trip."""
+    if specs is None or isinstance(specs, P):
+        spec = specs if isinstance(specs, P) else P()
+        return jax.tree.map(
+            lambda x: jax.device_put(x, NamedSharding(mesh, spec)), tree)
+    return jax.tree.map(
+        lambda x, s: jax.device_put(x, NamedSharding(mesh, s)), tree, specs)

@@ -1,0 +1,132 @@
+"""Logical-axis sharding: a single rules table maps model-level axis names
+("batch", "heads", "vocab", ...) onto physical mesh axes ("pod", "data",
+"model"), with a divisibility fallback so no shape can ever error.
+
+The pattern follows the t5x/maxtext logical-axis convention: model code
+annotates arrays with *logical* names via :func:`shard`; the mapping to the
+physical mesh is resolved here, against whatever mesh ``use_mesh_rules``
+installed.  Off-mesh (CPU tests, single device) every helper is a no-op, so
+the same model code runs unmodified from laptop to pod.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "AXIS_RULES",
+    "current_mesh",
+    "use_mesh_rules",
+    "logical_to_spec",
+    "sharding_for",
+    "shard",
+]
+
+# logical axis name → mesh axes tried in order (a tuple entry means "shard
+# over the product of these axes together").  First candidate that exists in
+# the mesh, has size > 1, and divides the dimension wins; otherwise the
+# dimension is replicated (never an error — the divisibility fallback).
+AXIS_RULES: dict = {
+    # data-parallel-ish dimensions
+    "batch": (("pod", "data"), ("data",), ("pod",)),
+    "capacity": (("pod", "data"), ("data",), ("pod",)),
+    "nodes": (("data",),),
+    "edges": (("data",),),
+    "candidates": (("data",),),
+    "rows": (("data",),),
+    # tensor-parallel dimensions
+    "heads": (("model",),),
+    "kv_heads": (("model",),),
+    "mlp": (("model",),),
+    "vocab": (("model",),),
+    "embed": (("model",),),
+    "experts": (("model",),),
+    # FSDP: parameters sharded over the data axis
+    "fsdp": (("data",),),
+    # never sharded (scan axis / sequence kept whole on CPU-scale runs)
+    "layers": (),
+    "seq": (),
+}
+
+_STATE = threading.local()
+
+
+def current_mesh() -> Optional[Mesh]:
+    """The mesh installed by the innermost ``use_mesh_rules`` (or None)."""
+    return getattr(_STATE, "mesh", None)
+
+
+@contextlib.contextmanager
+def use_mesh_rules(mesh: Optional[Mesh]):
+    """Install ``mesh`` as the target of the logical-axis rules.
+
+    ``None`` is accepted (single-device runs pass their mesh through
+    unconditionally) and makes every sharding helper a no-op."""
+    prev = current_mesh()
+    _STATE.mesh = mesh
+    try:
+        yield mesh
+    finally:
+        _STATE.mesh = prev
+
+
+def _mesh_axis_sizes(mesh: Mesh) -> dict:
+    return dict(mesh.shape)
+
+
+def logical_to_spec(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Mesh,
+) -> P:
+    """Resolve logical axis names to a PartitionSpec for ``shape`` on ``mesh``.
+
+    Guarantees: never raises on odd shapes (non-divisible dims fall back to
+    replication), never assigns the same mesh axis to two dimensions, drops
+    mesh axes of size <= 1."""
+    sizes = _mesh_axis_sizes(mesh)
+    used: set = set()
+    entries = []
+    for name, dim in zip(logical, shape):
+        entry = None
+        for cand in AXIS_RULES.get(name, ()):
+            axes = tuple(a for a in cand
+                         if sizes.get(a, 1) > 1 and a not in used)
+            if not axes:
+                continue
+            prod = 1
+            for a in axes:
+                prod *= sizes[a]
+            if dim % prod == 0:
+                used.update(axes)
+                entry = axes if len(axes) > 1 else axes[0]
+                break
+        entries.append(entry)
+    return P(*entries)
+
+
+def sharding_for(
+    logical: Sequence[Optional[str]],
+    shape: Sequence[int],
+    mesh: Optional[Mesh] = None,
+) -> Optional[NamedSharding]:
+    """NamedSharding for ``shape`` under the rules (None off-mesh)."""
+    mesh = mesh if mesh is not None else current_mesh()
+    if mesh is None:
+        return None
+    return NamedSharding(mesh, logical_to_spec(logical, shape, mesh))
+
+
+def shard(x, *logical: Optional[str]):
+    """Constrain ``x``'s sharding by logical axis names (identity off-mesh).
+
+    Usable inside jit: resolves against the mesh captured at trace time."""
+    mesh = current_mesh()
+    if mesh is None:
+        return x
+    spec = logical_to_spec(logical, x.shape, mesh)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))

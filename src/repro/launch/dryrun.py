@@ -31,7 +31,9 @@ OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                        "experiments", "dryrun")
 
 
-def _cost_get(cost: dict, key: str) -> float:
+def _cost_get(cost, key: str) -> float:
+    if isinstance(cost, list):  # jax < 0.5 returns [dict]
+        cost = cost[0] if cost else {}
     if not cost:
         return 0.0
     return float(cost.get(key, 0.0))

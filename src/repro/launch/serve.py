@@ -18,6 +18,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import get_arch
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import registry as _obs
 
 
 def serve_lm(spec, args):
@@ -37,17 +39,36 @@ def serve_lm(spec, args):
         lambda p, t, pos, c: tfm.serve_decode(p, t, pos, c, cfg))
     tok = prompts[:, :1]
     t0 = time.perf_counter()
-    for t in range(args.prompt_len - 1):
-        _, cache = decode(params, prompts[:, t:t + 1], jnp.int32(t), cache)
+    with obs_trace.span("serve.prefill", requests=B,
+                        prompt_len=args.prompt_len) as sp:
+        for t in range(args.prompt_len - 1):
+            _, cache = decode(params, prompts[:, t:t + 1], jnp.int32(t), cache)
+        sp.block(cache)
+    t_prefill = time.perf_counter() - t0
+    _obs.histogram("serve.prefill_seconds",
+                   "prompt prefill walltime per batch").observe(t_prefill)
     generated = []
     tok = prompts[:, -1:]
-    for t in range(args.prompt_len - 1, args.prompt_len + args.max_new - 1):
-        logits, cache = decode(params, tok, jnp.int32(t), cache)
-        tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
-        generated.append(tok)
-    jax.block_until_ready(tok)
+    t1 = time.perf_counter()
+    with obs_trace.span("serve.decode", requests=B,
+                        max_new=args.max_new) as sp:
+        for t in range(args.prompt_len - 1, args.prompt_len + args.max_new - 1):
+            td = time.perf_counter()
+            logits, cache = decode(params, tok, jnp.int32(t), cache)
+            tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
+            jax.block_until_ready(tok)
+            _obs.histogram("serve.decode_seconds",
+                           "per-token decode step walltime").observe(
+                time.perf_counter() - td)
+            generated.append(tok)
+        sp.block(tok)
+    t_decode = time.perf_counter() - t1
     dt = time.perf_counter() - t0
     total_tokens = B * (args.prompt_len + args.max_new)
+    _obs.gauge("serve.tokens_per_s", "end-to-end serving throughput").set(
+        total_tokens / max(dt, 1e-9))
+    _obs.gauge("serve.decode_tokens_per_s", "decode-phase throughput").set(
+        B * args.max_new / max(t_decode, 1e-9))
     print(f"{B} requests × ({args.prompt_len} prompt + {args.max_new} new) "
           f"in {dt:.2f}s → {total_tokens/dt:.0f} tok/s (greedy)")
     out = jnp.concatenate(generated, axis=1)
@@ -66,10 +87,17 @@ def serve_recsys(spec, args):
     vals, idx = fn(params, items)
     t0 = time.perf_counter()
     reps = 20
-    for _ in range(reps):
-        vals, idx = fn(params, items)
-        jax.block_until_ready(vals)
+    score_hist = _obs.histogram("serve.score_seconds",
+                                "recsys catalogue-scoring walltime per batch")
+    with obs_trace.span("serve.score", requests=args.requests, reps=reps):
+        for _ in range(reps):
+            tr = time.perf_counter()
+            vals, idx = fn(params, items)
+            jax.block_until_ready(vals)
+            score_hist.observe(time.perf_counter() - tr)
     dt = (time.perf_counter() - t0) / reps
+    _obs.gauge("serve.users_per_s", "recsys scoring throughput").set(
+        args.requests / max(dt, 1e-9))
     print(f"scored {args.requests} users × {cfg.vocab} items → top-10 in "
           f"{dt*1e3:.1f} ms/batch ({args.requests/dt:.0f} users/s)")
 

@@ -1,0 +1,95 @@
+"""Exporters: run-metadata fingerprint and schema-versioned JSON/JSONL.
+
+Every benchmark artifact starts with a fingerprint (jax version, backend,
+device count, git SHA) so a regression diff can tell "the code got slower"
+apart from "the environment changed"."""
+from __future__ import annotations
+
+import json
+import os
+import platform
+import subprocess
+import sys
+from typing import Iterable, Optional
+
+__all__ = [
+    "BENCH_SCHEMA",
+    "git_sha",
+    "run_fingerprint",
+    "bench_payload",
+    "write_json",
+    "write_jsonl",
+    "read_json",
+]
+
+#: bump on any incompatible change to the BENCH_*.json layout
+BENCH_SCHEMA = "repro.obs.bench/v1"
+
+
+def git_sha(root: Optional[str] = None) -> Optional[str]:
+    try:
+        out = subprocess.run(
+            ["git", "rev-parse", "--short", "HEAD"],
+            cwd=root or os.path.dirname(os.path.abspath(__file__)),
+            capture_output=True, text=True, timeout=10)
+        return out.stdout.strip() or None
+    except Exception:
+        return None
+
+
+def run_fingerprint() -> dict:
+    """Environment identity for artifact provenance."""
+    import jax
+
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind if jax.devices() else None,
+        "python": sys.version.split()[0],
+        "platform": platform.platform(),
+        "git_sha": git_sha(),
+    }
+
+
+def bench_payload(name: str, records: Iterable[dict],
+                  metrics: Optional[dict] = None,
+                  spans: Optional[list] = None) -> dict:
+    """Schema-versioned benchmark artifact.
+
+    ``records`` — the per-measurement rows (name + numeric fields);
+    ``metrics`` — a registry snapshot; ``spans`` — trace events."""
+    payload = {
+        "schema": BENCH_SCHEMA,
+        "name": name,
+        "fingerprint": run_fingerprint(),
+        "records": list(records),
+    }
+    if metrics is not None:
+        payload["metrics"] = metrics
+    if spans is not None:
+        payload["spans"] = spans
+    return payload
+
+
+def write_json(path: str, payload: dict) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(payload, f, indent=1, default=str, sort_keys=False)
+        f.write("\n")
+    os.replace(tmp, path)  # atomic: readers never see a torn artifact
+    return path
+
+
+def write_jsonl(path: str, rows: Iterable[dict]) -> str:
+    os.makedirs(os.path.dirname(os.path.abspath(path)), exist_ok=True)
+    with open(path, "w") as f:
+        for r in rows:
+            f.write(json.dumps(r, default=str) + "\n")
+    return path
+
+
+def read_json(path: str) -> dict:
+    with open(path) as f:
+        return json.load(f)

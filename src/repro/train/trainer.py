@@ -17,6 +17,8 @@ import jax
 import jax.numpy as jnp
 
 from repro.dist.sharding import use_mesh_rules
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import registry as _obs
 from . import checkpoint as ckpt_lib
 from .optim import Transform, apply_updates, global_norm
 
@@ -96,11 +98,25 @@ class StragglerWatchdog:
                                 1.5 * self.mean)
         if is_straggler:
             self.flagged.append((step, dt))
+            _obs.counter(
+                "train.straggler_events", "steps flagged as stragglers"
+            ).inc()
+            _obs.gauge("train.straggler_last_dt_s", "").set(dt)
         a = 0.05
         delta = dt - self.mean
         self.mean += a * delta
         self.var = (1 - a) * (self.var + a * delta * delta)
         return is_straggler
+
+
+def _batch_tokens(batch) -> int:
+    """Token count of one batch for the throughput gauge: the largest
+    integer-typed leaf's element count (labels/ids), 0 if none."""
+    best = 0
+    for leaf in jax.tree.leaves(batch):
+        if hasattr(leaf, "dtype") and jnp.issubdtype(leaf.dtype, jnp.integer):
+            best = max(best, int(leaf.size))
+    return best
 
 
 @dataclasses.dataclass
@@ -137,9 +153,21 @@ class Trainer:
         (params, opt_state), step, _ = self._manager.restore((params, opt_state))
         return params, opt_state, step
 
+    def _save(self, step, state):
+        t0 = time.perf_counter()
+        with obs_trace.span("train.checkpoint", step=step):
+            self._manager.save(step, state)
+        _obs.histogram("train.checkpoint_seconds",
+                       "blocking checkpoint-save duration").observe(
+            time.perf_counter() - t0)
+        _obs.counter("train.checkpoints", "checkpoint saves issued").inc()
+
     def run(self, params, opt_state, batches, start_step: int = 0,
             num_steps: int = 100, log_every: int = 10, log_fn=print):
         history = []
+        step_hist = _obs.histogram("train.step_seconds",
+                                   "per-step walltime (post block_until_ready)")
+        step_ctr = _obs.counter("train.steps", "optimizer steps taken")
         with use_mesh_rules(self.mesh):
             for step in range(start_step, num_steps):
                 batch = next(batches)
@@ -147,6 +175,12 @@ class Trainer:
                 params, opt_state, metrics = self._jitted(params, opt_state, batch)
                 jax.block_until_ready(metrics["loss"])
                 dt = time.perf_counter() - t0
+                step_hist.observe(dt)
+                step_ctr.inc()
+                tokens = _batch_tokens(batch)
+                if tokens:
+                    _obs.gauge("train.tokens_per_s",
+                               "training throughput").set(tokens / max(dt, 1e-9))
                 straggler = self.watchdog.observe(step, dt)
                 if step % log_every == 0 or step == num_steps - 1:
                     m = {k: float(v) for k, v in metrics.items()}
@@ -156,8 +190,8 @@ class Trainer:
                            + (" [STRAGGLER]" if straggler else ""))
                 if (self._manager is not None and step > start_step
                         and step % self.ckpt_every == 0):
-                    self._manager.save(step, (params, opt_state))
+                    self._save(step, (params, opt_state))
         if self._manager is not None:
-            self._manager.save(num_steps, (params, opt_state))
+            self._save(num_steps, (params, opt_state))
             self._manager.wait()
         return params, opt_state, history

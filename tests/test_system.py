@@ -107,6 +107,8 @@ def test_dryrun_machinery_small_mesh():
             cell = build_cell("gat-cora", "full_graph_sm", mesh)
             compiled = jax.jit(cell.fn).lower(*cell.args).compile()
         cost = compiled.cost_analysis()
+        if isinstance(cost, list):  # jax < 0.5 returns [dict]
+            cost = cost[0]
         coll = parse_collectives(compiled.as_text(), 8)
         rl = roofline_terms(cost["flops"] * 8, cost["bytes accessed"] * 8,
                             coll, 8, model_flops=cell.model_flops)
