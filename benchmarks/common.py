@@ -10,7 +10,9 @@ import time
 
 import jax
 
-from repro.core import DeviceGraph, Graph, build_blocked, grid_graph, rmat_graph
+from repro.core import (
+    DeviceGraph, Graph, build_blocked, from_edges, grid_graph, rmat_graph,
+)
 from repro.obs.metrics import registry as _obs
 
 # Scaled-down analogue of the paper's Table 2 suite (CPU container):
@@ -32,6 +34,30 @@ def _weighted_grid(side):
     rng = np.random.default_rng(0)
     return Graph(g.n, g.rowptr, g.colidx,
                  rng.random(g.m, dtype=np.float32))
+
+
+def balance_mix_graph(n: int = 16384, deg: int = 24, seed: int = 0) -> Graph:
+    """Mixed-density graph for the load-balancing benchmark (fig8_balance).
+
+    Destination concentration varies by source range, so TOCAB blocks (source
+    ranges in pull) land in genuinely different sparsity bins: the first
+    quarter of sources targets 64 hub destinations (dense blocks — high
+    edges-per-row after compaction), the next quarter a 1k pool (medium),
+    and the rest target uniformly random destinations (sparse)."""
+    import numpy as np
+    rng = np.random.default_rng(seed)
+    q = n // 4
+    srcs, dsts = [], []
+    for lo, hi, pool in ((0, q, 64), (q, 2 * q, 1024), (2 * q, n, n)):
+        src = np.repeat(np.arange(lo, hi), deg)
+        dst = rng.integers(0, pool, src.shape[0])
+        srcs.append(src)
+        dsts.append(dst)
+    src = np.concatenate(srcs)
+    dst = np.concatenate(dsts)
+    keep = src != dst
+    vals = rng.random(int(keep.sum()), dtype=np.float32)
+    return from_edges(n, src[keep], dst[keep], vals=vals, dedup=True)
 
 
 _CACHE: dict = {}

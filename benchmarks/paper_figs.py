@@ -8,13 +8,11 @@ per-iteration times and partition counts.
 from __future__ import annotations
 
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (
     CacheConfig, bc, build_blocked, pagerank_iteration, simulate_pagerank_variant,
     spmv,
 )
-from repro.core.pagerank import pagerank
 from .common import BLOCK_SIZE, SUITE, emit, get_graph, timeit
 
 PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
@@ -92,6 +90,63 @@ def fig8_bc():
         t_toc = timeit(lambda: bc(dg, bg, jnp.int32(0)))
         emit(f"fig8/bc/{gname}/flat", t_flat, speedup=1.0)
         emit(f"fig8/bc/{gname}/graphcage", t_toc, speedup=t_flat / t_toc)
+
+
+def fig8_balance():
+    """Fig. 8 (extended, §load-balancing): uniform vs sparsity-aware TOCAB
+    scheduling, whole-engine and per-bin.  Blocks are classified by
+    edges-per-row terciles; each bin runs its matched strategy (row-per-lane
+    segmented reduce / chunked scan / dense tile)."""
+    import jax
+    from repro.core import balance as bal
+    from repro.core import tocab
+    from repro.obs.metrics import registry as _obs
+    from .common import balance_mix_graph
+
+    balance_block = 512  # finer blocks than the default suite → real spread
+    graphs = {
+        "rmat14": lambda: get_graph("rmat14")[0],
+        "grid256": lambda: get_graph("grid256")[0],
+        "balmix": balance_mix_graph,  # dense/medium/sparse by construction
+    }
+    for gname, build in graphs.items():
+        g = build()
+        bgb = build_blocked(g, block_size=balance_block)
+        bgpb = build_blocked(g, block_size=balance_block, direction="push")
+        x = jnp.ones((g.n,), jnp.float32)
+        runs = {
+            "pull/uniform": jax.jit(lambda v, b=bgb: tocab.tocab_pull(b, v)),
+            "pull/balanced": jax.jit(
+                lambda v, b=bgb: tocab.tocab_pull(b, v, schedule="balanced")),
+            "push/uniform": jax.jit(lambda v, b=bgpb: tocab.tocab_push(b, v)),
+            "push/balanced": jax.jit(
+                lambda v, b=bgpb: tocab.tocab_push(b, v, schedule="balanced")),
+        }
+        times = {name: timeit(fn, x) for name, fn in runs.items()}
+        for name, us in times.items():
+            direction = name.split("/")[0]
+            emit(f"fig8_balance/{gname}/{name}", us,
+                 speedup=times[f"{direction}/uniform"] / us,
+                 edges_per_s=g.m / (us * 1e-6))
+        # Per-bin phase-2 timings (pull): how each strategy spends its time.
+        summary = bgb.schedule.summary()
+        for bin_id, bname in enumerate(bal.BIN_NAMES):
+            info = summary[bname]
+            if not info["blocks"]:
+                continue
+            fn = jax.jit(
+                lambda v, b=bin_id: bal.bin_pull_partials(bgb, b, v))
+            us = timeit(fn, x)
+            eps = info["edges"] / max(us * 1e-6, 1e-12)
+            _obs.histogram(
+                "tocab.balance.bin_seconds", "per-bin phase-2 wall time"
+            ).observe(us * 1e-6, bin=bname, graph=gname)
+            _obs.gauge(
+                "tocab.balance.bin_edges_per_s", "per-bin phase-2 throughput"
+            ).set(eps, bin=bname, graph=gname)
+            emit(f"fig8_balance/{gname}/bin/{bname}", us,
+                 blocks=info["blocks"], edges=info["edges"],
+                 rows=info["rows"], edges_per_s=eps)
 
 
 def fig9_cache_missrate():
@@ -192,7 +247,7 @@ def ablation_blocking():
                  blocks=blocks[name])
 
 
-ALL = [fig6_pagerank, fig7_spmv, fig8_bc, fig9_cache_missrate,
+ALL = [fig6_pagerank, fig7_spmv, fig8_bc, fig8_balance, fig9_cache_missrate,
        fig10_dram_per_edge, fig11_blocksize_sweep,
        table3_framework_comparison, table4_partition_counts,
        ablation_blocking]

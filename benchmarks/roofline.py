@@ -17,7 +17,6 @@ import os
 os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
 
 import argparse
-import dataclasses
 import json
 import time
 
@@ -26,8 +25,7 @@ import jax
 from repro.configs import all_cells, get_arch
 from repro.dist.sharding import use_mesh_rules
 from repro.launch.cells import build_cell
-from repro.launch.hlo_analysis import (
-    HW, parse_collectives, roofline_terms)
+from repro.launch.hlo_analysis import parse_collectives, roofline_terms
 from repro.launch.mesh import make_production_mesh
 
 OUT_DIR = os.path.join(os.path.dirname(os.path.dirname(

@@ -3,7 +3,7 @@ exact literature config, a reduced smoke config, and its shape set."""
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Callable, Optional
+from typing import Any, Callable
 
 __all__ = ["ShapeCell", "ArchSpec", "LM_SHAPES", "GNN_SHAPES", "RECSYS_SHAPES"]
 

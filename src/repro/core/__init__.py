@@ -19,12 +19,22 @@ from .graph import (  # noqa: F401
     uniform_random_graph,
 )
 from .partition import BlockedGraph, build_blocked, choose_block_size  # noqa: F401
+from .balance import (  # noqa: F401
+    BIN_NAMES,
+    UNWEIGHTED,
+    BlockSchedule,
+    balanced_edge_reduce,
+    balanced_pull,
+    balanced_push,
+    make_schedule,
+)
 from .tocab import (  # noqa: F401
     baseline_pull,
     baseline_push,
     cb_pull,
     reduce_partials,
     segment_reduce,
+    tocab_edge_reduce,
     tocab_pull,
     tocab_pull_partials,
     tocab_push,

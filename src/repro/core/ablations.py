@@ -24,7 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from .graph import DeviceGraph, Graph
-from .partition import REDUCE_IDENTITY, BlockedGraph, build_blocked
+from .partition import REDUCE_IDENTITY
 
 __all__ = ["build_blocked_2d", "tocab_pull_2d", "propagation_blocking_pull",
            "Blocked2D"]

@@ -16,6 +16,7 @@ from typing import Optional
 import jax
 import jax.numpy as jnp
 
+from .balance import UNWEIGHTED as _unweighted
 from .graph import DeviceGraph
 from .partition import BlockedGraph
 from . import tocab
@@ -25,12 +26,9 @@ __all__ = ["pagerank", "pagerank_iteration", "PR_VARIANTS"]
 PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
 
-def _unweighted(msgs, edge_vals):
-    """PR is unweighted: ignore any edge values the graph carries."""
-    return msgs
-
-
-def _gather_sums(variant: str, dg, bg, contributions):
+def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform"):
+    # PR is unweighted: the UNWEIGHTED sentinel combine ignores any edge
+    # values the graph carries (and keeps the dense tile path eligible).
     kw = dict(reduce="sum", combine=_unweighted)
     if variant == "base":
         return tocab.baseline_pull(dg, contributions, **kw)
@@ -39,9 +37,9 @@ def _gather_sums(variant: str, dg, bg, contributions):
     if variant == "cb":
         return tocab.cb_pull(bg, contributions, **kw)
     if variant == "gc-pull":
-        return tocab.tocab_pull(bg, contributions, **kw)
+        return tocab.tocab_pull(bg, contributions, schedule=schedule, **kw)
     if variant == "gc-push":
-        return tocab.tocab_push(bg, contributions, **kw)
+        return tocab.tocab_push(bg, contributions, schedule=schedule, **kw)
     raise ValueError(f"unknown PR variant {variant!r}")
 
 
@@ -53,20 +51,23 @@ def pagerank_iteration(
     out_degree: jnp.ndarray,
     damping: float = 0.85,
     handle_dangling: bool = True,
+    schedule: str = "uniform",
 ):
     """One PR iteration: contributions → gather/scatter → apply."""
     n = rank.shape[0]
     safe_deg = jnp.maximum(out_degree, 1).astype(rank.dtype)
     contributions = rank / safe_deg
     contributions = jnp.where(out_degree > 0, contributions, 0.0)
-    sums = _gather_sums(variant, dg, bg, contributions)
+    sums = _gather_sums(variant, dg, bg, contributions, schedule)
     dangling = jnp.where(out_degree > 0, 0.0, rank).sum() if handle_dangling else 0.0
     return (1.0 - damping) / n + damping * (sums + dangling / n)
 
 
 @partial(
     jax.jit,
-    static_argnames=("variant", "damping", "tol", "max_iters", "handle_dangling"),
+    static_argnames=(
+        "variant", "damping", "tol", "max_iters", "handle_dangling", "schedule",
+    ),
 )
 def pagerank(
     dg: DeviceGraph,
@@ -76,6 +77,7 @@ def pagerank(
     tol: float = 1e-6,
     max_iters: int = 200,
     handle_dangling: bool = True,
+    schedule: str = "uniform",
 ):
     """Iterate PR until the L1 delta falls below ``tol``.
 
@@ -90,7 +92,8 @@ def pagerank(
     def body(state):
         rank, _, it = state
         new_rank = pagerank_iteration(
-            variant, dg, bg, rank, dg.out_degree, damping, handle_dangling
+            variant, dg, bg, rank, dg.out_degree, damping, handle_dangling,
+            schedule,
         )
         return new_rank, jnp.abs(new_rank - rank).sum(), it + 1
 

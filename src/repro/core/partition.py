@@ -17,7 +17,7 @@ from __future__ import annotations
 
 import dataclasses
 import math
-from typing import Optional
+from typing import Optional, Tuple, Union
 
 import jax
 import jax.numpy as jnp
@@ -26,6 +26,9 @@ import numpy as np
 from .graph import Graph
 
 __all__ = ["BlockedGraph", "build_blocked", "choose_block_size"]
+
+# Bin thresholds forwarded to repro.core.balance.make_schedule by default.
+DEFAULT_BIN_THRESHOLDS = (4.0, 32.0)
 
 # Identity elements per reduction op (used to neutralize padded edge slots).
 REDUCE_IDENTITY = {
@@ -75,6 +78,12 @@ class BlockedGraph:
     n_edges: jnp.ndarray  # int32[num_blocks]
     edge_perm: jnp.ndarray = None  # int32[num_blocks, edge_budget] original edge id (pad = m)
     edge_vals: Optional[jnp.ndarray] = None  # f32[num_blocks, edge_budget]
+    # distinct window-side vertices per block (reduction rows in push)
+    n_window: Optional[jnp.ndarray] = None  # int32[num_blocks]
+    # static sparsity classification (repro.core.balance.BlockSchedule);
+    # static → part of the jit cache key, so per-bin dispatch is free.
+    schedule: Optional[object] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     # ------------------------------------------------------------------ #
     @property
@@ -115,12 +124,21 @@ def build_blocked(
     pad_edges_to: int = 128,
     pad_locals_to: int = 8,
     fast_mem_bytes: int = 4 * 1024 * 1024,
+    classify: bool = True,
+    bin_thresholds: Union[Tuple[float, float], str] = DEFAULT_BIN_THRESHOLDS,
 ) -> BlockedGraph:
     """Host-side TOCAB preprocessing (paper §3.1 phase 1).
 
     ``direction='pull'`` blocks by source range; ``'push'`` by destination
     range.  Edges within a block are sorted by their *scatter-side* index so
     accumulation is segment-contiguous.
+
+    ``classify=True`` (default) also bins every block by edges-per-row
+    sparsity (``repro.core.balance``) — the blocked subgraphs are much
+    sparser than the original graph, so the balanced engines dispatch each
+    bin to a matched execution strategy.  ``bin_thresholds`` may be an
+    ``(lo, hi)`` pair of edges-per-row cutoffs or ``'auto'`` (per-graph
+    terciles).
     """
     assert direction in ("pull", "push")
     if block_size is None:
@@ -181,6 +199,20 @@ def build_blocked(
         edge_vals[blk, slot] = vals
     id_map[blk, local_id] = compact_g.astype(np.int32)
 
+    # Distinct window-side vertices per block — the reduction-row count of
+    # the push direction (pull reduces over the compacted side, n_local).
+    n_window = np.zeros(num_blocks, dtype=np.int64)
+    if blk.shape[0]:
+        pair = np.unique(blk * np.int64(g.n + 1) + window_g)
+        np.add.at(n_window, (pair // (g.n + 1)).astype(np.int64), 1)
+
+    schedule = None
+    if classify:
+        from .balance import make_schedule  # deferred import (cycle-free)
+
+        rows = n_local if direction == "pull" else n_window
+        schedule = make_schedule(edge_counts, rows, thresholds=bin_thresholds)
+
     return BlockedGraph(
         n=g.n,
         m=g.m,
@@ -197,4 +229,6 @@ def build_blocked(
         n_edges=jnp.asarray(edge_counts, jnp.int32),
         edge_perm=jnp.asarray(edge_perm),
         edge_vals=None if edge_vals is None else jnp.asarray(edge_vals),
+        n_window=jnp.asarray(n_window, jnp.int32),
+        schedule=schedule,
     )

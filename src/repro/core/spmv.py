@@ -20,17 +20,19 @@ __all__ = ["spmv", "SPMV_VARIANTS"]
 SPMV_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
 
-@partial(jax.jit, static_argnames=("variant",))
+@partial(jax.jit, static_argnames=("variant", "schedule"))
 def spmv(
     dg: DeviceGraph,
     bg: Optional[BlockedGraph],
     x: jnp.ndarray,
     variant: str = "gc-pull",
+    schedule: str = "uniform",
 ):
     """y[dst] = Σ_{(src,dst)} A[src,dst]·x[src].
 
     ``x`` may be a vector (n,) — SpMV — or a matrix (n, d) — SpMM, which is
-    the GNN aggregation primitive."""
+    the GNN aggregation primitive.  ``schedule='balanced'`` runs the blocked
+    variants with sparsity-aware per-bin strategies."""
     if variant == "base":
         return tocab.baseline_pull(dg, x, reduce="sum")
     if variant == "push":
@@ -38,7 +40,7 @@ def spmv(
     if variant == "cb":
         return tocab.cb_pull(bg, x, reduce="sum")
     if variant == "gc-pull":
-        return tocab.tocab_pull(bg, x, reduce="sum")
+        return tocab.tocab_pull(bg, x, reduce="sum", schedule=schedule)
     if variant == "gc-push":
-        return tocab.tocab_push(bg, x, reduce="sum")
+        return tocab.tocab_push(bg, x, reduce="sum", schedule=schedule)
     raise ValueError(f"unknown SpMV variant {variant!r}")

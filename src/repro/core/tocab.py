@@ -38,6 +38,9 @@ __all__ = [
     "tocab_pull",
     "tocab_push",
     "tocab_pull_partials",
+    "tocab_edge_reduce",
+    "blocked_edge_values",
+    "tocab_gather_src",
     "reduce_partials",
     "timed",
 ]
@@ -57,16 +60,28 @@ def _record_engine(engine: str, direction: str, blocks: int, edges: int):
         edges, engine=engine)
 
 
+def _block_tree(out):
+    """``block_until_ready`` over an arbitrary engine return value: arrays,
+    tuples/dicts of arrays, or leaves without the method (ints, numpy)."""
+    return jax.tree_util.tree_map(
+        lambda leaf: leaf.block_until_ready()
+        if hasattr(leaf, "block_until_ready") else leaf,
+        out,
+    )
+
+
 def timed(engine_fn, graph, *args, engine: str = None, **kw):
     """Synchronously run one engine call, recording wall time and edges/s.
 
     ``graph`` is the DeviceGraph / BlockedGraph first argument; edges come
-    from its static ``m``.  Returns the (blocked-until-ready) result."""
+    from its static ``m``.  The engine may return a bare array or any pytree
+    (e.g. ``(rank, iters)``) — every leaf is blocked on before the clock
+    stops.  Returns the (blocked-until-ready) result."""
     import time
 
     name = engine or getattr(engine_fn, "__name__", "engine")
     t0 = time.perf_counter()
-    out = jax.block_until_ready(engine_fn(graph, *args, **kw))
+    out = _block_tree(engine_fn(graph, *args, **kw))
     dt = time.perf_counter() - t0
     _obs.histogram("tocab.call_seconds", "engine wall time").observe(
         dt, engine=name)
@@ -228,30 +243,47 @@ def reduce_partials(bg: BlockedGraph, partials: jnp.ndarray, reduce: str = "sum"
     return out[:-1]
 
 
-@partial(jax.jit, static_argnames=("reduce", "combine"))
+@partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
 def tocab_pull(
     bg: BlockedGraph,
     values: jnp.ndarray,
     reduce: str = "sum",
     combine: Optional[Callable] = None,
+    schedule: str = "uniform",
 ):
+    """``schedule='uniform'`` processes every block with the same segmented
+    reduce; ``'balanced'`` dispatches each sparsity bin of the build-time
+    :class:`~repro.core.balance.BlockSchedule` to its matched strategy."""
+    if schedule == "balanced":
+        from .balance import balanced_pull
+
+        return balanced_pull(bg, values, reduce, combine)
+    if schedule != "uniform":
+        raise ValueError(f"unknown schedule {schedule!r}")
     _record_engine("tocab_pull", "pull", bg.num_blocks, bg.m)
     partials = tocab_pull_partials(bg, values, reduce, combine)
     return reduce_partials(bg, partials, reduce)
 
 
-@partial(jax.jit, static_argnames=("reduce", "combine"))
+@partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
 def tocab_push(
     bg: BlockedGraph,
     values: jnp.ndarray,
     reduce: str = "sum",
     combine: Optional[Callable] = None,
+    schedule: str = "uniform",
 ):
     """Push (Alg. 5): block by destination range; contributions of the few
     distinct sources of a block are fetched *once* through ``id_map``
     (block_contrib slab), then fanned out per edge; accumulation is confined
     to the block's destination window (conflict-free, no atomics on TPU)."""
     assert bg.direction == "push"
+    if schedule == "balanced":
+        from .balance import balanced_push
+
+        return balanced_push(bg, values, reduce, combine)
+    if schedule != "uniform":
+        raise ValueError(f"unknown schedule {schedule!r}")
     _record_engine("tocab_push", "push", bg.num_blocks, bg.m)
     # Gather each unique source's value once per block (the data-reuse win).
     block_contrib = jnp.take(values, bg.id_map, axis=0, mode="fill", fill_value=0)
@@ -297,10 +329,17 @@ def tocab_edge_reduce(
     bg: BlockedGraph,
     flat_edge_vals: jnp.ndarray,  # (m, ...) in original edge order
     reduce: str = "sum",
+    schedule: str = "uniform",
 ):
     """Reduce *edge* values to the compacted side (dst for pull layout)
     through the partial-slab + reduction machinery — the GNN primitive
     (edge messages → node aggregate) in TOCAB form."""
+    if schedule == "balanced":
+        from .balance import balanced_edge_reduce
+
+        return balanced_edge_reduce(bg, flat_edge_vals, reduce)
+    if schedule != "uniform":
+        raise ValueError(f"unknown schedule {schedule!r}")
     vals = blocked_edge_values(bg, flat_edge_vals)
     ident = jnp.asarray(REDUCE_IDENTITY[reduce], vals.dtype)
     mask = bg.edge_mask

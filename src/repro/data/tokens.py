@@ -6,7 +6,7 @@ placed with the mesh sharding before being handed to the step function.
 """
 from __future__ import annotations
 
-from typing import Iterator, Optional
+from typing import Iterator
 
 import jax
 import numpy as np

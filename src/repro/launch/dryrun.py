@@ -23,7 +23,7 @@ import jax
 
 from repro.configs import all_cells, get_arch
 from repro.dist.sharding import use_mesh_rules
-from repro.launch.cells import Cell, arg_bytes_per_device, build_cell
+from repro.launch.cells import arg_bytes_per_device, build_cell
 from repro.launch.hlo_analysis import parse_collectives, roofline_terms
 from repro.launch.mesh import make_production_mesh
 

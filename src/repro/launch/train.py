@@ -15,7 +15,6 @@ import argparse
 import dataclasses
 
 import jax
-import numpy as np
 
 from repro.configs import get_arch
 from repro.dist.elastic import make_mesh_for

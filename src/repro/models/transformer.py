@@ -15,7 +15,6 @@ Entry points:
 from __future__ import annotations
 
 import dataclasses
-from functools import partial
 from typing import Optional
 
 import jax

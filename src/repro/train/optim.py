@@ -7,7 +7,6 @@ for 100B-param meshes), global-norm clipping, LR schedules.
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Callable, NamedTuple, Optional
 
 import jax

@@ -19,7 +19,6 @@ def small():
 @pytest.fixture(scope="module")
 def small_unweighted():
     """PR is unweighted in the paper; networkx.pagerank is weight-sensitive."""
-    import dataclasses
     from repro.core.graph import Graph
     g = rmat_graph(scale=8, edge_factor=6, seed=11, weights=True)
     gu = Graph(g.n, g.rowptr, g.colidx, None)

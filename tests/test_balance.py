@@ -1,0 +1,197 @@
+"""Sparsity-aware load balancing: schedule invariants + engine equivalence."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import (
+    UNWEIGHTED, DeviceGraph, balanced_pull, baseline_pull, build_blocked,
+    make_schedule, pagerank, rmat_graph, spmv, tocab_edge_reduce, tocab_pull,
+    tocab_push,
+)
+from repro.core.balance import (
+    BIN_DENSE, BIN_NAMES, BIN_SPARSE, bin_pull_partials, require_schedule,
+)
+
+INF = float("inf")
+
+
+@pytest.fixture(scope="module")
+def setup():
+    g = rmat_graph(scale=9, edge_factor=8, seed=7, weights=True)
+    return (
+        g,
+        DeviceGraph.from_host(g),
+        build_blocked(g, block_size=128, direction="pull",
+                      bin_thresholds="auto"),
+        build_blocked(g, block_size=128, direction="push",
+                      bin_thresholds="auto"),
+    )
+
+
+def _vals(n, d=None, seed=0):
+    rng = np.random.default_rng(seed)
+    shape = (n,) if d is None else (n, d)
+    return jnp.asarray(rng.random(shape, dtype=np.float32))
+
+
+def test_schedule_computed_at_build(setup):
+    g, dg, bg, bgp = setup
+    for b in (bg, bgp):
+        sched = require_schedule(b)
+        assert len(sched.bins) == b.num_blocks
+        assert sum(sched.blocks_per_bin) == b.num_blocks
+        assert sum(sched.edges_per_bin) == g.m
+        # bins partition the block set
+        seen = sorted(i for bin_id in range(3) for i in sched.blocks_in(bin_id))
+        assert seen == list(range(b.num_blocks))
+        hash(sched)  # static jit aux data must be hashable
+
+
+def test_row_budget_covers_bins(setup):
+    g, dg, bg, _ = setup
+    sched = bg.schedule
+    n_local = np.asarray(bg.n_local)
+    for bin_id in range(3):
+        ids = sched.blocks_in(bin_id)
+        if not ids:
+            continue
+        rb = sched.row_budget_per_bin[bin_id]
+        assert rb >= int(n_local[list(ids)].max())
+        assert rb % 8 == 0
+
+
+def test_empty_blocks_go_sparse():
+    sched = make_schedule([0, 10, 100], [1, 2, 2])
+    assert sched.bins[0] == BIN_SPARSE
+    assert sched.bins[2] == BIN_DENSE
+
+
+@pytest.mark.parametrize("reduce", ["sum", "min", "max"])
+def test_balanced_pull_matches_uniform(setup, reduce):
+    g, dg, bg, _ = setup
+    x = _vals(g.n)
+    ref = np.asarray(tocab_pull(bg, x, reduce=reduce))
+    out = np.asarray(tocab_pull(bg, x, reduce=reduce, schedule="balanced"))
+    f = np.isfinite(ref)
+    assert (np.isfinite(out) == f).all()
+    np.testing.assert_allclose(out[f], ref[f], rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("d", [None, 5])
+def test_balanced_push_matches_baseline(setup, d):
+    g, dg, _, bgp = setup
+    x = _vals(g.n, d)
+    ref = np.asarray(baseline_pull(dg, x))
+    out = np.asarray(tocab_push(bgp, x, schedule="balanced"))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_balanced_unweighted_combine(setup):
+    """PageRank semantics: UNWEIGHTED ignores stored edge values and keeps
+    the dense tile path eligible."""
+    g, dg, bg, _ = setup
+    x = _vals(g.n)
+    ref = np.asarray(baseline_pull(dg, x, combine=UNWEIGHTED))
+    out = np.asarray(tocab_pull(bg, x, combine=UNWEIGHTED, schedule="balanced"))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_balanced_edge_reduce(setup):
+    import jax
+    g, dg, bg, _ = setup
+    rng = np.random.default_rng(3)
+    ev = jnp.asarray(rng.random(g.m, dtype=np.float32))
+    _, dst = g.edges()
+    ref = jax.ops.segment_sum(ev, jnp.asarray(dst, jnp.int32), num_segments=g.n)
+    out = tocab_edge_reduce(bg, ev, schedule="balanced")
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+@pytest.mark.parametrize("thresholds", [(INF, INF), (0.0, 0.0), (0.0, INF)])
+def test_single_bin_boundaries(setup, thresholds):
+    """Degenerate thresholds force every block into one bin — all-sparse,
+    all-dense, all-medium — and the result must not change."""
+    g, dg, _, _ = setup
+    bg = build_blocked(g, block_size=128, bin_thresholds=thresholds)
+    lone = [i for i, n in enumerate(bg.schedule.blocks_per_bin)
+            if n == bg.num_blocks]
+    assert lone, bg.schedule.blocks_per_bin
+    x = _vals(g.n)
+    ref = np.asarray(baseline_pull(dg, x))
+    out = np.asarray(tocab_pull(bg, x, schedule="balanced"))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_pallas_dense_bin_grid(setup):
+    """The Pallas tile kernel on the dense bin only (bin-aware grid)."""
+    g, dg, _, _ = setup
+    bg = build_blocked(g, block_size=64, bin_thresholds=(0.0, 0.0))
+    assert bg.schedule.blocks_per_bin[BIN_DENSE] == bg.num_blocks
+    x = _vals(g.n)
+    ref = np.asarray(baseline_pull(dg, x))
+    out = np.asarray(balanced_pull(bg, x, dense_impl="pallas"))
+    np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+
+
+def test_bin_partials_shape(setup):
+    g, dg, bg, _ = setup
+    x = _vals(g.n)
+    sched = bg.schedule
+    for bin_id in range(3):
+        sub = bin_pull_partials(bg, bin_id, x)
+        if not sched.blocks_in(bin_id):
+            assert sub is None
+            continue
+        k = len(sched.blocks_in(bin_id))
+        rb = min(sched.row_budget_per_bin[bin_id], bg.local_budget)
+        assert sub.shape == (k, rb)
+
+
+def test_missing_schedule_raises(setup):
+    g, dg, _, _ = setup
+    bg = build_blocked(g, block_size=128, classify=False)
+    assert bg.schedule is None
+    with pytest.raises(ValueError, match="BlockSchedule"):
+        tocab_pull(bg, _vals(g.n), schedule="balanced")
+
+
+def test_pagerank_balanced(setup):
+    g, dg, bg, _ = setup
+    r_u, it_u = pagerank(dg, bg, variant="gc-pull", tol=1e-8)
+    r_b, it_b = pagerank(dg, bg, variant="gc-pull", tol=1e-8,
+                         schedule="balanced")
+    # per-bin reassociation may shift convergence by an iteration near tol
+    assert abs(int(it_b) - int(it_u)) <= 1
+    np.testing.assert_allclose(np.asarray(r_b), np.asarray(r_u),
+                               rtol=1e-5, atol=1e-7)
+
+
+def test_spmv_balanced(setup):
+    g, dg, bg, _ = setup
+    x = _vals(g.n)
+    np.testing.assert_allclose(
+        np.asarray(spmv(dg, bg, x, variant="gc-pull", schedule="balanced")),
+        np.asarray(spmv(dg, bg, x, variant="gc-pull")),
+        rtol=2e-5, atol=2e-5)
+
+
+def test_timed_tolerates_pytree_returns(setup):
+    """`timed()` must block on engines returning pytrees, not just arrays."""
+    from repro.core.tocab import timed
+    g, dg, bg, _ = setup
+    x = _vals(g.n)
+    out = timed(
+        lambda b, v: {"rank": tocab_pull(b, v), "iters": 3, "note": "ok"},
+        bg, x, engine="pytree_engine")
+    assert out["iters"] == 3 and out["rank"].shape == (g.n,)
+
+
+def test_obs_bin_counters(setup):
+    from repro.obs.metrics import registry
+    g, dg, bg, _ = setup
+    tocab_pull(bg, _vals(g.n), schedule="balanced")
+    snap = registry.snapshot()
+    assert "tocab.balance.bin_blocks" in snap
+    labels = {tuple(sorted(s["labels"].items()))
+              for s in snap["tocab.balance.bin_blocks"]["series"]}
+    assert any(("bin", name) in lab for name in BIN_NAMES for lab in labels)

@@ -1,0 +1,102 @@
+"""Hypothesis property tests: sparsity-aware scheduling ≡ uniform TOCAB.
+
+The load balancer must be a pure performance transform — for every graph,
+block size, and threshold placement (including degenerate single-bin
+splits), the balanced engines return the uniform engines' results.
+"""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip(
+    "hypothesis",
+    reason="optional dev dependency (pip install -r requirements-dev.txt)")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    DeviceGraph, baseline_pull, build_blocked, from_edges, make_schedule,
+    tocab_pull, tocab_push,
+)
+
+INF = float("inf")
+
+# Spread thresholds across every bin-boundary regime: all-sparse, all-dense,
+# all-medium, data-driven terciles, and the physical default.
+THRESHOLDS = st.sampled_from(
+    [(INF, INF), (0.0, 0.0), (0.0, INF), "auto", (4.0, 32.0), (1.0, 8.0)])
+
+
+@st.composite
+def random_graph(draw):
+    n = draw(st.integers(4, 200))
+    m = draw(st.integers(1, 600))
+    seed = draw(st.integers(0, 2**31 - 1))
+    rng = np.random.default_rng(seed)
+    src = rng.integers(0, n, m)
+    dst = rng.integers(0, n, m)
+    keep = src != dst
+    if not keep.any():
+        src, dst = np.array([0]), np.array([min(1, n - 1)])
+    else:
+        src, dst = src[keep], dst[keep]
+    vals = rng.random(len(src), dtype=np.float32)
+    return from_edges(n, src, dst, vals=vals, dedup=True)
+
+
+@given(random_graph(), st.sampled_from([4, 16, 64]), THRESHOLDS)
+@settings(max_examples=25, deadline=None)
+def test_balanced_pull_equals_uniform(g, block_size, thresholds):
+    bg = build_blocked(g, block_size=block_size, bin_thresholds=thresholds)
+    rng = np.random.default_rng(0)
+    x = jnp.asarray(rng.random(g.n, dtype=np.float32))
+    np.testing.assert_allclose(
+        np.asarray(tocab_pull(bg, x, schedule="balanced")),
+        np.asarray(tocab_pull(bg, x)),
+        rtol=1e-4, atol=1e-5)
+
+
+@given(random_graph(), st.sampled_from([8, 32]), THRESHOLDS)
+@settings(max_examples=15, deadline=None)
+def test_balanced_push_equals_baseline(g, block_size, thresholds):
+    dg = DeviceGraph.from_host(g)
+    bgp = build_blocked(g, block_size=block_size, direction="push",
+                        bin_thresholds=thresholds)
+    rng = np.random.default_rng(1)
+    x = jnp.asarray(rng.random(g.n, dtype=np.float32))
+    np.testing.assert_allclose(
+        np.asarray(tocab_push(bgp, x, schedule="balanced")),
+        np.asarray(baseline_pull(dg, x)),
+        rtol=1e-4, atol=1e-5)
+
+
+@given(random_graph(), st.sampled_from(["min", "max"]))
+@settings(max_examples=15, deadline=None)
+def test_balanced_pull_nonsum_reduce(g, reduce):
+    """min/max ride the sparse/scan strategies (dense bin falls back)."""
+    bg = build_blocked(g, block_size=16, bin_thresholds=(1.0, 4.0))
+    rng = np.random.default_rng(2)
+    x = jnp.asarray(rng.random(g.n, dtype=np.float32))
+    ref = np.asarray(tocab_pull(bg, x, reduce=reduce))
+    out = np.asarray(tocab_pull(bg, x, reduce=reduce, schedule="balanced"))
+    f = np.isfinite(ref)
+    assert (np.isfinite(out) == f).all()
+    np.testing.assert_allclose(out[f], ref[f], rtol=1e-4, atol=1e-5)
+
+
+@given(st.lists(st.integers(0, 500), min_size=1, max_size=40), THRESHOLDS)
+@settings(max_examples=50, deadline=None)
+def test_schedule_partitions_blocks(edges, thresholds):
+    """make_schedule is total: every block lands in exactly one bin and the
+    per-bin aggregates tally, for any edge histogram and threshold mode."""
+    rows = [max(1, e // 3) for e in edges]
+    sched = make_schedule(edges, rows, thresholds=thresholds)
+    assert sum(sched.blocks_per_bin) == len(edges)
+    assert sum(sched.edges_per_bin) == sum(edges)
+    assert sum(sched.rows_per_bin) == sum(rows)
+    for bin_id in range(3):
+        ids = sched.blocks_in(bin_id)
+        assert len(ids) == sched.blocks_per_bin[bin_id]
+        rb = sched.row_budget_per_bin[bin_id]
+        assert rb % 8 == 0
+        assert all(rows[i] <= rb for i in ids)
+    hash(sched)

@@ -1,5 +1,4 @@
 """Per-kernel interpret=True validation sweeps vs the ref.py oracles."""
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

@@ -2,7 +2,7 @@
 import numpy as np
 import pytest
 
-from repro.core import Graph, build_blocked, rmat_graph, uniform_random_graph
+from repro.core import build_blocked, rmat_graph, uniform_random_graph
 
 
 @pytest.mark.parametrize("direction", ["pull", "push"])

@@ -7,8 +7,6 @@ import sys
 import textwrap
 
 import jax
-import jax.numpy as jnp
-import numpy as np
 import pytest
 
 ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))

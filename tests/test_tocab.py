@@ -5,7 +5,7 @@ import pytest
 
 from repro.core import (
     DeviceGraph, baseline_pull, baseline_push, build_blocked, cb_pull,
-    rmat_graph, tocab_pull, tocab_push, uniform_random_graph,
+    rmat_graph, tocab_pull, tocab_push,
 )
 from repro.core.tocab import (
     blocked_edge_values, tocab_edge_reduce, tocab_gather_src,
