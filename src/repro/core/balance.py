@@ -95,6 +95,13 @@ class BlockSchedule:
     # block, so their tile scatters shrink from the global local_budget to
     # this much smaller static width: the scheduling win in shape form.
     row_budget_per_bin: Tuple[int, int, int] = (0, 0, 0)
+    # max *compact-side* rows (n_local) of any block in the bin, 8-aligned.
+    # This bounds compact_idx — the scatter target of the pull partials and
+    # of balanced_edge_reduce.  For pull layouts it equals row_budget_per_bin
+    # (the classification rows *are* n_local); for push the classification
+    # rows are the window side (n_window), which says nothing about
+    # compact_idx — sizing the edge-reduce slab from it corrupts results.
+    compact_budget_per_bin: Tuple[int, int, int] = (0, 0, 0)
 
     @property
     def num_blocks(self) -> int:
@@ -118,12 +125,16 @@ def make_schedule(
     n_edges: Sequence[int],
     n_rows: Sequence[int],
     thresholds: Union[Tuple[float, float], str] = DEFAULT_THRESHOLDS,
+    n_compact_rows: Optional[Sequence[int]] = None,
 ) -> BlockSchedule:
     """Classify blocks by edges-per-row (host-side, build time).
 
     ``n_rows`` is the reduction-side row count of each block: compacted
-    locals for pull, window vertices for push.  ``thresholds='auto'`` picks
-    per-graph terciles of the observed edges-per-row distribution.
+    locals for pull, window vertices for push.  ``n_compact_rows`` is the
+    compact-side count (``n_local``) when it differs from ``n_rows`` — push
+    layouts must pass it so ``compact_budget_per_bin`` bounds ``compact_idx``
+    rather than the window.  ``thresholds='auto'`` picks per-graph terciles
+    of the observed edges-per-row distribution.
     """
     e = np.asarray(n_edges, dtype=np.float64)
     r = np.maximum(np.asarray(n_rows, dtype=np.float64), 1.0)
@@ -144,12 +155,16 @@ def make_schedule(
     bins = np.where(epr < lo, BIN_SPARSE, np.where(epr < hi, BIN_MEDIUM, BIN_DENSE))
     bins[e == 0] = BIN_SPARSE  # empty blocks ride the cheapest path
     rows = np.asarray(n_rows, dtype=np.int64)
+    compact = (
+        rows if n_compact_rows is None
+        else np.asarray(n_compact_rows, dtype=np.int64)
+    )
 
     def per_bin(arr):
         return tuple(int(arr[bins == b].sum()) for b in range(3))
 
-    def budget(b):
-        sel = rows[bins == b]
+    def budget(arr, b):
+        sel = arr[bins == b]
         top = int(sel.max()) if sel.size else 0
         return max(8, -(-top // 8) * 8)
 
@@ -159,7 +174,8 @@ def make_schedule(
         blocks_per_bin=tuple(int((bins == b).sum()) for b in range(3)),
         edges_per_bin=per_bin(e),
         rows_per_bin=per_bin(rows),
-        row_budget_per_bin=tuple(budget(b) for b in range(3)),
+        row_budget_per_bin=tuple(budget(rows, b) for b in range(3)),
+        compact_budget_per_bin=tuple(budget(compact, b) for b in range(3)),
     )
 
 
@@ -178,6 +194,15 @@ def default_dense_impl() -> str:
     interpret-mode Pallas path pads features to the 128 lane width, which is
     pure overhead off-TPU)."""
     return "pallas" if jax.default_backend() == "tpu" else "onehot"
+
+
+def _compact_budget(sched: BlockSchedule, bin_id: int, local_budget: int) -> int:
+    """Static slab width for reductions over ``compact_idx`` — the bin's
+    compact-side budget, falling back to the classification-row budget
+    (identical for pull) and then the global ``local_budget`` for
+    hand-built schedules that carry neither."""
+    rb = sched.compact_budget_per_bin[bin_id] or sched.row_budget_per_bin[bin_id]
+    return min(rb or local_budget, local_budget)
 
 
 def _record_bins(bg: BlockedGraph, direction: str, engine: str):
@@ -343,24 +368,28 @@ def bin_pull_partials(
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     dense_impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
 ):
     """Phase-2 partials of one sparsity bin (its blocks only, in schedule
-    order), at the bin's static row budget: shape ``(k, row_budget, …)``.
-    Exposed so benchmarks can time bins individually."""
+    order), at the bin's static compact-row budget: shape ``(k, budget, …)``.
+    Exposed so benchmarks can time bins individually.  ``interpret`` controls
+    the Pallas dense path (default: compiled on real TPU, interpret mode
+    elsewhere)."""
     sched = require_schedule(bg)
     ids = sched.blocks_in(bin_id)
     if not ids:
         return None
-    rb = min(sched.row_budget_per_bin[bin_id] or bg.local_budget,
-             bg.local_budget)
+    rb = _compact_budget(sched, bin_id, bg.local_budget)
     if bin_id == BIN_DENSE and _dense_eligible(reduce, combine):
         impl = dense_impl or default_dense_impl()
         if impl == "pallas":
             from repro.kernels.tocab_spmm.ops import tocab_spmm_partials
 
+            if interpret is None:
+                interpret = jax.default_backend() != "tpu"
             return tocab_spmm_partials(
                 bg, values, block_ids=ids, local_budget=rb,
-                unweighted=combine is UNWEIGHTED)
+                unweighted=combine is UNWEIGHTED, interpret=interpret)
         cidx, mask, msgs = _pull_msgs(bg, ids, values, reduce, combine)
         return _reduce_msgs_onehot(rb, cidx, mask, msgs)
     cidx, mask, msgs = _pull_msgs(bg, ids, values, reduce, combine)
@@ -375,6 +404,7 @@ def balanced_pull_partials(
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     dense_impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
 ):
     """Sparsity-aware phase 2: every bin runs its matched strategy; results
     land in the same (num_blocks, local_budget, …) slab as the uniform path,
@@ -387,7 +417,8 @@ def balanced_pull_partials(
         (bg.num_blocks, bg.local_budget) + tail,
         REDUCE_IDENTITY[reduce], dtype)
     for bin_id in range(len(BIN_NAMES)):
-        sub = bin_pull_partials(bg, bin_id, values, reduce, combine, dense_impl)
+        sub = bin_pull_partials(
+            bg, bin_id, values, reduce, combine, dense_impl, interpret)
         if sub is None:
             continue
         ids = jnp.asarray(sched.blocks_in(bin_id), jnp.int32)
@@ -402,13 +433,15 @@ def balanced_pull(
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     dense_impl: Optional[str] = None,
+    interpret: Optional[bool] = None,
 ):
     """Sparsity-aware TOCAB pull — bitwise-compatible with ``tocab_pull``
     up to float reassociation (each bin reduces the same edge sets)."""
     from .tocab import reduce_partials
 
     _record_bins(bg, "pull", "balanced_pull")
-    partials = balanced_pull_partials(bg, values, reduce, combine, dense_impl)
+    partials = balanced_pull_partials(
+        bg, values, reduce, combine, dense_impl, interpret)
     return reduce_partials(bg, partials, reduce)
 
 
@@ -580,8 +613,10 @@ def balanced_edge_reduce(
         ids = sched.blocks_in(bin_id)
         if not ids:
             continue
-        rb = min(sched.row_budget_per_bin[bin_id] or bg.local_budget,
-                 bg.local_budget)
+        # compact_idx is bounded by n_local, so the slab width must come from
+        # the compact budget — row_budget_per_bin is the *window* side on
+        # push layouts and under-sizes the scatter (cross-block spill).
+        rb = _compact_budget(sched, bin_id, bg.local_budget)
         idx = jnp.asarray(ids, jnp.int32)
         cidx = jnp.take(bg.compact_idx, idx, axis=0)
         mask = jnp.take(mask_full, idx, axis=0)

@@ -211,7 +211,8 @@ def build_blocked(
         from .balance import make_schedule  # deferred import (cycle-free)
 
         rows = n_local if direction == "pull" else n_window
-        schedule = make_schedule(edge_counts, rows, thresholds=bin_thresholds)
+        schedule = make_schedule(edge_counts, rows, thresholds=bin_thresholds,
+                                 n_compact_rows=n_local)
 
     return BlockedGraph(
         n=g.n,

@@ -48,7 +48,7 @@ def test_schedule_computed_at_build(setup):
 
 
 def test_row_budget_covers_bins(setup):
-    g, dg, bg, _ = setup
+    g, dg, bg, bgp = setup
     sched = bg.schedule
     n_local = np.asarray(bg.n_local)
     for bin_id in range(3):
@@ -58,6 +58,18 @@ def test_row_budget_covers_bins(setup):
         rb = sched.row_budget_per_bin[bin_id]
         assert rb >= int(n_local[list(ids)].max())
         assert rb % 8 == 0
+    # push: classification rows are the window side, but the compact budget
+    # must still cover compact_idx (n_local) — the edge-reduce slab width
+    for b in (bg, bgp):
+        sched = b.schedule
+        n_local = np.asarray(b.n_local)
+        for bin_id in range(3):
+            ids = sched.blocks_in(bin_id)
+            if not ids:
+                continue
+            cb = sched.compact_budget_per_bin[bin_id]
+            assert cb >= int(n_local[list(ids)].max())
+            assert cb % 8 == 0
 
 
 def test_empty_blocks_go_sparse():
@@ -96,15 +108,41 @@ def test_balanced_unweighted_combine(setup):
     np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
 
 
-def test_balanced_edge_reduce(setup):
+@pytest.mark.parametrize("direction", ["pull", "push"])
+def test_balanced_edge_reduce(setup, direction):
     import jax
-    g, dg, bg, _ = setup
+    g, dg, bg, bgp = setup
+    b = bg if direction == "pull" else bgp
     rng = np.random.default_rng(3)
     ev = jnp.asarray(rng.random(g.m, dtype=np.float32))
-    _, dst = g.edges()
-    ref = jax.ops.segment_sum(ev, jnp.asarray(dst, jnp.int32), num_segments=g.n)
-    out = tocab_edge_reduce(bg, ev, schedule="balanced")
+    src, dst = g.edges()
+    compact_side = dst if direction == "pull" else src
+    ref = jax.ops.segment_sum(
+        ev, jnp.asarray(compact_side, jnp.int32), num_segments=g.n)
+    out = tocab_edge_reduce(b, ev, schedule="balanced")
     np.testing.assert_allclose(out, ref, rtol=2e-5, atol=2e-5)
+    np.testing.assert_allclose(
+        out, tocab_edge_reduce(b, ev), rtol=2e-5, atol=2e-5)
+
+
+def test_balanced_edge_reduce_push_hub():
+    """Hub-destination push graph: few window rows (dst) but many compact
+    rows (src) per block — regression test for sizing the edge-reduce slab
+    from the window budget (compact ids spilled into adjacent blocks)."""
+    from repro.core import from_edges
+
+    n = 128
+    src = np.concatenate([np.arange(1, n), np.arange(n)])
+    dst = np.concatenate([np.zeros(n - 1, np.int64), (np.arange(n) + 1) % n])
+    keep = src != dst
+    g = from_edges(n, src[keep], dst[keep], dedup=True)
+    bgp = build_blocked(g, block_size=32, direction="push")
+    rng = np.random.default_rng(5)
+    ev = jnp.asarray(rng.random(g.m, dtype=np.float32))
+    np.testing.assert_allclose(
+        np.asarray(tocab_edge_reduce(bgp, ev, schedule="balanced")),
+        np.asarray(tocab_edge_reduce(bgp, ev)),
+        rtol=2e-5, atol=2e-5)
 
 
 @pytest.mark.parametrize("thresholds", [(INF, INF), (0.0, 0.0), (0.0, INF)])

@@ -15,7 +15,7 @@ from hypothesis import given, settings, strategies as st
 
 from repro.core import (
     DeviceGraph, baseline_pull, build_blocked, from_edges, make_schedule,
-    tocab_pull, tocab_push,
+    tocab_edge_reduce, tocab_pull, tocab_push,
 )
 
 INF = float("inf")
@@ -69,6 +69,24 @@ def test_balanced_push_equals_baseline(g, block_size, thresholds):
         rtol=1e-4, atol=1e-5)
 
 
+@given(random_graph(), st.sampled_from([8, 32]),
+       st.sampled_from(["pull", "push"]), THRESHOLDS)
+@settings(max_examples=20, deadline=None)
+def test_balanced_edge_reduce_equals_uniform(g, block_size, direction,
+                                             thresholds):
+    """Both layouts: push compacts the *source* side, whose per-block row
+    counts can exceed the window-side classification rows (hub dsts) — the
+    balanced slab must be sized by the compact budget."""
+    bg = build_blocked(g, block_size=block_size, direction=direction,
+                       bin_thresholds=thresholds)
+    rng = np.random.default_rng(3)
+    ev = jnp.asarray(rng.random(g.m, dtype=np.float32))
+    np.testing.assert_allclose(
+        np.asarray(tocab_edge_reduce(bg, ev, schedule="balanced")),
+        np.asarray(tocab_edge_reduce(bg, ev)),
+        rtol=1e-4, atol=1e-5)
+
+
 @given(random_graph(), st.sampled_from(["min", "max"]))
 @settings(max_examples=15, deadline=None)
 def test_balanced_pull_nonsum_reduce(g, reduce):
@@ -89,7 +107,9 @@ def test_schedule_partitions_blocks(edges, thresholds):
     """make_schedule is total: every block lands in exactly one bin and the
     per-bin aggregates tally, for any edge histogram and threshold mode."""
     rows = [max(1, e // 3) for e in edges]
-    sched = make_schedule(edges, rows, thresholds=thresholds)
+    compact = [max(1, e // 2) for e in edges]  # push-like: ≠ classification rows
+    sched = make_schedule(edges, rows, thresholds=thresholds,
+                          n_compact_rows=compact)
     assert sum(sched.blocks_per_bin) == len(edges)
     assert sum(sched.edges_per_bin) == sum(edges)
     assert sum(sched.rows_per_bin) == sum(rows)
@@ -97,6 +117,8 @@ def test_schedule_partitions_blocks(edges, thresholds):
         ids = sched.blocks_in(bin_id)
         assert len(ids) == sched.blocks_per_bin[bin_id]
         rb = sched.row_budget_per_bin[bin_id]
-        assert rb % 8 == 0
+        cb = sched.compact_budget_per_bin[bin_id]
+        assert rb % 8 == 0 and cb % 8 == 0
         assert all(rows[i] <= rb for i in ids)
+        assert all(compact[i] <= cb for i in ids)
     hash(sched)
