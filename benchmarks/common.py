@@ -27,6 +27,10 @@ SUITE = {
 
 BLOCK_SIZE = 2048  # default TOCAB block for the CPU-scale suite
 
+#: the graph CI smoke jobs (fig6 smoke, tune-smoke) exercise — smallest
+#: scale-free member of the suite
+SMOKE_GRAPH = "rmat14"
+
 
 def _weighted_grid(side):
     import numpy as np

@@ -177,22 +177,29 @@ def fig10_dram_per_edge():
                  vs_base=r["dram_per_edge"] / base["dram_per_edge"])
 
 
-def fig11_blocksize_sweep():
-    """Fig. 11: subgraph size ↔ performance trade-off (per-iteration time +
-    model miss rate).  Paper picks 256 vertices for a 2.75MB GPU L2; the
-    analytic sweep shows the same U-shape."""
-    import jax
-    g, dg, _, _ = get_graph("rmat15")
-    cfg = CacheConfig(capacity_bytes=64 * 1024, line_bytes=128, ways=16)
-    rank = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+def fig11_blocksize():
+    """Fig. 11: subgraph size ↔ performance trade-off, measured through the
+    autotuner's trial runner (same warmup/median-of-k spans the tuner
+    records) next to the cache model's prediction for each block size.
+    Paper picks 256 vertices for a 2.75MB GPU L2; the sweep shows the same
+    U-shape — and the row whose ``chosen=1`` is what ``schedule="auto"``
+    would pick."""
+    from repro.tune import Candidate, run_trial
+    from repro.tune.analytic import predicted_cost
+
+    g, _, _, _ = get_graph("rmat15")
+    trials = []
     for bs in (256, 1024, 4096, 16384):
-        bg = build_blocked(g, block_size=bs)
-        fn = jax.jit(lambda r, bb=bg: pagerank_iteration("gc-pull", dg, bb, r,
-                                                         dg.out_degree))
-        us = timeit(fn, rank)
-        r = simulate_pagerank_variant(g, "tocab", cfg, block_size=bs)
-        emit(f"fig11/blocksize/{bs}", us,
-             blocks=r["num_blocks"], miss_rate=r["miss_rate"])
+        c = Candidate(engine="tocab", direction="pull", block_size=bs)
+        trials.append((bs, run_trial(g, c, workload="pagerank",
+                                     graph_name="rmat15")))
+    best_us = min(t.us for _, t in trials)
+    for bs, t in trials:
+        r = predicted_cost(g, t.candidate)
+        emit(f"fig11/blocksize/{bs}", t.us,
+             blocks=r["num_blocks"], miss_rate=r["miss_rate"],
+             dram_per_edge=r["dram_per_edge"],
+             edges_per_s=t.edges_per_s, chosen=int(t.us == best_us))
 
 
 def table3_framework_comparison():
@@ -248,6 +255,6 @@ def ablation_blocking():
 
 
 ALL = [fig6_pagerank, fig7_spmv, fig8_bc, fig8_balance, fig9_cache_missrate,
-       fig10_dram_per_edge, fig11_blocksize_sweep,
+       fig10_dram_per_edge, fig11_blocksize,
        table3_framework_comparison, table4_partition_counts,
        ablation_blocking]

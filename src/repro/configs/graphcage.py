@@ -25,6 +25,11 @@ class GraphCageCfg:
     pr_damping: float = 0.85
     pr_tol: float = 1e-6
     bfs_alpha: float = 15.0
+    # autotuner (repro.tune) — the Fig. 11 sensitivity axes the search
+    # sweeps around this config's defaults, and where the DB persists
+    tune_block_sizes: tuple = (1024, 2048, 4096, 8192, 16384)
+    tune_alphas: tuple = (4.0, 15.0, 64.0)
+    tune_db_dir: str = "experiments/tune"
 
 
 DEFAULT = GraphCageCfg()

@@ -13,6 +13,7 @@ from .graph import (  # noqa: F401
     DeviceGraph,
     Graph,
     from_edges,
+    graph_fingerprint,
     grid_graph,
     rmat_graph,
     to_networkx,

@@ -20,11 +20,46 @@ __all__ = [
     "Graph",
     "DeviceGraph",
     "from_edges",
+    "graph_fingerprint",
     "rmat_graph",
     "uniform_random_graph",
     "grid_graph",
     "to_networkx",
 ]
+
+#: cap on how many colidx entries the fingerprint hashes (strided sample)
+_FP_SAMPLE = 4096
+
+
+def _fingerprint_arrays(n: int, m: int, out_degree, colidx) -> str:
+    """Canonical structural fingerprint used as the tuning-db key.
+
+    Hashes (n, m, the full out-degree sequence, a strided colidx sample) —
+    identical for a host :class:`Graph` and the :class:`DeviceGraph` built
+    from it, independent of edge weights (plans key dtype separately), and
+    stable across processes (no Python ``hash`` randomization)."""
+    import hashlib
+
+    h = hashlib.sha256()
+    h.update(f"repro.graph/v1:{n}:{m}:".encode())
+    h.update(np.ascontiguousarray(out_degree, dtype=np.int64).tobytes())
+    colidx = np.ascontiguousarray(colidx, dtype=np.int32)
+    stride = max(1, colidx.shape[0] // _FP_SAMPLE)
+    h.update(colidx[::stride].tobytes())
+    return h.hexdigest()[:16]
+
+
+def graph_fingerprint(g) -> str:
+    """Fingerprint of a :class:`Graph` or :class:`DeviceGraph` (see
+    :func:`_fingerprint_arrays`).  DeviceGraphs built via ``from_host``
+    carry it precomputed; hand-built ones are hashed on the fly."""
+    fp = getattr(g, "fingerprint", None)
+    if isinstance(fp, str):
+        return fp
+    if isinstance(g, Graph):
+        return _fingerprint_arrays(g.n, g.m, g.out_degree, g.colidx)
+    return _fingerprint_arrays(
+        g.n, g.m, np.asarray(g.out_degree), np.asarray(g.dst))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -84,6 +119,9 @@ class DeviceGraph:
     out_degree: jnp.ndarray  # int32[n]
     in_degree: jnp.ndarray  # int32[n]
     vals: Optional[jnp.ndarray] = None
+    # structural fingerprint (tuning-db key); static → usable at trace time
+    fingerprint: Optional[str] = dataclasses.field(
+        default=None, metadata=dict(static=True))
 
     @property
     def m(self) -> int:
@@ -100,6 +138,7 @@ class DeviceGraph:
             out_degree=jnp.asarray(g.out_degree, jnp.int32),
             in_degree=jnp.asarray(g.in_degree, jnp.int32),
             vals=None if g.vals is None else jnp.asarray(g.vals, jnp.float32),
+            fingerprint=graph_fingerprint(g),
         )
 
 

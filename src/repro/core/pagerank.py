@@ -63,12 +63,6 @@ def pagerank_iteration(
     return (1.0 - damping) / n + damping * (sums + dangling / n)
 
 
-@partial(
-    jax.jit,
-    static_argnames=(
-        "variant", "damping", "tol", "max_iters", "handle_dangling", "schedule",
-    ),
-)
 def pagerank(
     dg: DeviceGraph,
     bg: Optional[BlockedGraph] = None,
@@ -81,7 +75,32 @@ def pagerank(
 ):
     """Iterate PR until the L1 delta falls below ``tol``.
 
-    Returns (rank, iterations)."""
+    Returns (rank, iterations).  ``schedule="auto"`` consults the tuning DB
+    (``repro.tune``) via the graph's build-time fingerprint; resolution
+    happens here, outside jit, so the jit cache is keyed on the concrete
+    schedule and a re-tune takes effect on the next call."""
+    schedule = tocab.resolve_schedule(
+        bg if bg is not None else dg, schedule, workload="pagerank")
+    return _pagerank_jit(
+        dg, bg, variant, damping, tol, max_iters, handle_dangling, schedule)
+
+
+@partial(
+    jax.jit,
+    static_argnames=(
+        "variant", "damping", "tol", "max_iters", "handle_dangling", "schedule",
+    ),
+)
+def _pagerank_jit(
+    dg: DeviceGraph,
+    bg: Optional[BlockedGraph],
+    variant: str,
+    damping: float,
+    tol: float,
+    max_iters: int,
+    handle_dangling: bool,
+    schedule: str,
+):
     n = dg.n
     rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
 

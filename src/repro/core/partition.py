@@ -23,7 +23,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph
+from .graph import Graph, graph_fingerprint
 
 __all__ = ["BlockedGraph", "build_blocked", "choose_block_size"]
 
@@ -83,6 +83,10 @@ class BlockedGraph:
     # static sparsity classification (repro.core.balance.BlockSchedule);
     # static → part of the jit cache key, so per-bin dispatch is free.
     schedule: Optional[object] = dataclasses.field(
+        default=None, metadata=dict(static=True))
+    # structural fingerprint of the source graph (tuning-db key); static so
+    # schedule="auto" can resolve a tuned plan even at trace time.
+    fingerprint: Optional[str] = dataclasses.field(
         default=None, metadata=dict(static=True))
 
     # ------------------------------------------------------------------ #
@@ -232,4 +236,5 @@ def build_blocked(
         edge_vals=None if edge_vals is None else jnp.asarray(edge_vals),
         n_window=jnp.asarray(n_window, jnp.int32),
         schedule=schedule,
+        fingerprint=graph_fingerprint(g),
     )

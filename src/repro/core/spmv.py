@@ -20,19 +20,35 @@ __all__ = ["spmv", "SPMV_VARIANTS"]
 SPMV_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
 
-@partial(jax.jit, static_argnames=("variant", "schedule"))
 def spmv(
     dg: DeviceGraph,
     bg: Optional[BlockedGraph],
     x: jnp.ndarray,
     variant: str = "gc-pull",
     schedule: str = "uniform",
+    dense_impl: Optional[str] = None,
 ):
     """y[dst] = Σ_{(src,dst)} A[src,dst]·x[src].
 
     ``x`` may be a vector (n,) — SpMV — or a matrix (n, d) — SpMM, which is
     the GNN aggregation primitive.  ``schedule='balanced'`` runs the blocked
-    variants with sparsity-aware per-bin strategies."""
+    variants with sparsity-aware per-bin strategies; ``schedule='auto'``
+    consults the tuning DB (resolved here, outside jit).  ``dense_impl``
+    forces the balanced dense-bin backend (``'pallas'`` / ``'onehot'``)."""
+    schedule = tocab.resolve_schedule(
+        bg if bg is not None else dg, schedule, workload="spmv")
+    return _spmv_jit(dg, bg, x, variant, schedule, dense_impl)
+
+
+@partial(jax.jit, static_argnames=("variant", "schedule", "dense_impl"))
+def _spmv_jit(
+    dg: DeviceGraph,
+    bg: Optional[BlockedGraph],
+    x: jnp.ndarray,
+    variant: str,
+    schedule: str,
+    dense_impl: Optional[str],
+):
     if variant == "base":
         return tocab.baseline_pull(dg, x, reduce="sum")
     if variant == "push":
@@ -40,7 +56,8 @@ def spmv(
     if variant == "cb":
         return tocab.cb_pull(bg, x, reduce="sum")
     if variant == "gc-pull":
-        return tocab.tocab_pull(bg, x, reduce="sum", schedule=schedule)
+        return tocab.tocab_pull(bg, x, reduce="sum", schedule=schedule,
+                                dense_impl=dense_impl)
     if variant == "gc-push":
         return tocab.tocab_push(bg, x, reduce="sum", schedule=schedule)
     raise ValueError(f"unknown SpMV variant {variant!r}")

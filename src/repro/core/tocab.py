@@ -32,6 +32,7 @@ from .partition import REDUCE_IDENTITY, BlockedGraph
 
 __all__ = [
     "segment_reduce",
+    "resolve_schedule",
     "baseline_pull",
     "baseline_push",
     "cb_pull",
@@ -243,21 +244,32 @@ def reduce_partials(bg: BlockedGraph, partials: jnp.ndarray, reduce: str = "sum"
     return out[:-1]
 
 
-@partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
-def tocab_pull(
+def resolve_schedule(bg, schedule: str, workload: str = "spmv") -> str:
+    """``"auto"`` → the tuned plan's schedule for this graph (``repro.tune``
+    DB keyed by the BlockedGraph's build-time fingerprint — static, so this
+    is safe even at jit trace time), anything else passes through."""
+    if schedule != "auto":
+        return schedule
+    from repro.tune.plan import resolve_schedule as _resolve
+
+    return _resolve(bg, workload=workload)
+
+
+@partial(jax.jit, static_argnames=("reduce", "combine", "schedule",
+                                   "dense_impl"))
+def _tocab_pull_jit(
     bg: BlockedGraph,
     values: jnp.ndarray,
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     schedule: str = "uniform",
+    dense_impl: Optional[str] = None,
 ):
-    """``schedule='uniform'`` processes every block with the same segmented
-    reduce; ``'balanced'`` dispatches each sparsity bin of the build-time
-    :class:`~repro.core.balance.BlockSchedule` to its matched strategy."""
     if schedule == "balanced":
         from .balance import balanced_pull
 
-        return balanced_pull(bg, values, reduce, combine)
+        return balanced_pull(bg, values, reduce, combine,
+                             dense_impl=dense_impl)
     if schedule != "uniform":
         raise ValueError(f"unknown schedule {schedule!r}")
     _record_engine("tocab_pull", "pull", bg.num_blocks, bg.m)
@@ -265,18 +277,34 @@ def tocab_pull(
     return reduce_partials(bg, partials, reduce)
 
 
+def tocab_pull(
+    bg: BlockedGraph,
+    values: jnp.ndarray,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    schedule: str = "uniform",
+    dense_impl: Optional[str] = None,
+):
+    """``schedule='uniform'`` processes every block with the same segmented
+    reduce; ``'balanced'`` dispatches each sparsity bin of the build-time
+    :class:`~repro.core.balance.BlockSchedule` to its matched strategy;
+    ``'auto'`` resolves uniform/balanced from the ``repro.tune`` tuning DB
+    (falling back to uniform when this graph was never tuned).
+    ``dense_impl`` forces the balanced dense-bin backend ('pallas' /
+    'onehot'; default picks per backend)."""
+    schedule = resolve_schedule(bg, schedule)
+    return _tocab_pull_jit(bg, values, reduce=reduce, combine=combine,
+                           schedule=schedule, dense_impl=dense_impl)
+
+
 @partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
-def tocab_push(
+def _tocab_push_jit(
     bg: BlockedGraph,
     values: jnp.ndarray,
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     schedule: str = "uniform",
 ):
-    """Push (Alg. 5): block by destination range; contributions of the few
-    distinct sources of a block are fetched *once* through ``id_map``
-    (block_contrib slab), then fanned out per edge; accumulation is confined
-    to the block's destination window (conflict-free, no atomics on TPU)."""
     assert bg.direction == "push"
     if schedule == "balanced":
         from .balance import balanced_push
@@ -316,6 +344,23 @@ def tocab_push(
     return out[:-1]
 
 
+def tocab_push(
+    bg: BlockedGraph,
+    values: jnp.ndarray,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    schedule: str = "uniform",
+):
+    """Push (Alg. 5): block by destination range; contributions of the few
+    distinct sources of a block are fetched *once* through ``id_map``
+    (block_contrib slab), then fanned out per edge; accumulation is confined
+    to the block's destination window (conflict-free, no atomics on TPU).
+    ``schedule`` as in :func:`tocab_pull` (including ``'auto'``)."""
+    schedule = resolve_schedule(bg, schedule)
+    return _tocab_push_jit(bg, values, reduce=reduce, combine=combine,
+                           schedule=schedule)
+
+
 # ====================================================================== #
 # Dynamic per-edge values (GNN support): flat edge arrays → blocked slabs
 # ====================================================================== #
@@ -334,6 +379,7 @@ def tocab_edge_reduce(
     """Reduce *edge* values to the compacted side (dst for pull layout)
     through the partial-slab + reduction machinery — the GNN primitive
     (edge messages → node aggregate) in TOCAB form."""
+    schedule = resolve_schedule(bg, schedule)
     if schedule == "balanced":
         from .balance import balanced_edge_reduce
 

@@ -26,9 +26,31 @@ from .graph import DeviceGraph
 from .partition import BlockedGraph
 from . import tocab
 
-__all__ = ["bfs", "bc", "sssp", "connected_components", "INF_DEPTH"]
+__all__ = ["bfs", "bc", "sssp", "connected_components", "INF_DEPTH",
+           "DEFAULT_ALPHA"]
 
 INF_DEPTH = jnp.iinfo(jnp.int32).max // 2
+
+#: the paper's Beamer direction-switch threshold (m_frontier > m/α → pull)
+DEFAULT_ALPHA = 15.0
+
+
+def _resolve_traversal(obj, schedule: str, alpha, workload: str):
+    """Concretize ``schedule="auto"`` / ``alpha=None`` from the tuning DB.
+
+    Runs outside jit (the public wrappers call it before dispatching to the
+    jitted bodies) so the jit cache is keyed on the concrete values and a
+    re-tune takes effect on the next call."""
+    want_auto = schedule == "auto"
+    schedule = tocab.resolve_schedule(obj, schedule, workload=workload)
+    if alpha is None:
+        if want_auto:
+            from repro.tune.plan import resolve_alpha
+
+            alpha = resolve_alpha(obj, workload=workload)
+        else:
+            alpha = DEFAULT_ALPHA
+    return schedule, float(alpha)
 
 
 def _callbacks_enabled() -> bool:
@@ -69,17 +91,20 @@ def _frontier_reach(
     bg_pull: Optional[BlockedGraph],
     frontier_f32: jnp.ndarray,
     use_pull: jnp.ndarray,
+    schedule: str = "uniform",
 ):
     """reached[dst] = max over in-edges of frontier[src]  (0/1 floats).
 
     ``use_pull`` selects TOCAB pull (dense phase) vs flat push (sparse
     phase).  Both are lowered; `lax.cond` picks at runtime — on TPU the
-    pull branch is the blocked kernel, the push branch the flat one."""
+    pull branch is the blocked kernel, the push branch the flat one.
+    ``schedule`` must already be concrete (no ``"auto"`` here — the public
+    wrappers resolve it before tracing)."""
 
     def pull_branch(f):
         if bg_pull is None:
             return tocab.baseline_pull(dg, f, reduce="max")
-        return tocab.tocab_pull(bg_pull, f, reduce="max")
+        return tocab.tocab_pull(bg_pull, f, reduce="max", schedule=schedule)
 
     def push_branch(f):
         return tocab.baseline_push(dg, f, reduce="max")
@@ -87,18 +112,36 @@ def _frontier_reach(
     return jax.lax.cond(use_pull, pull_branch, push_branch, frontier_f32)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "alpha"))
 def bfs(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
     source: jnp.ndarray,
     max_iters: int = 0,
-    alpha: float = 15.0,
+    alpha: Optional[float] = None,
+    schedule: str = "uniform",
 ):
     """Direction-optimizing BFS.  ``dg``/``bg_pull`` are over Gᵀ edges
     oriented (src→dst) = (in-neighbour → vertex), i.e. the pull layout.
 
+    ``schedule="auto"`` consults the tuning DB for the pull phase's bin
+    dispatch; ``alpha=None`` takes the tuned Beamer α under ``"auto"`` and
+    the paper's 15 otherwise.
+
     Returns (depth int32[n], levels int32, push_iters, pull_iters)."""
+    schedule, alpha = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs")
+    return _bfs_jit(dg, bg_pull, source, max_iters, alpha, schedule)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "alpha", "schedule"))
+def _bfs_jit(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_iters: int,
+    alpha: float,
+    schedule: str,
+):
     n = dg.n
     max_iters = max_iters or n
     depth0 = jnp.full((n,), INF_DEPTH, jnp.int32).at[source].set(0)
@@ -114,7 +157,7 @@ def bfs(
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
         _emit_frontier("bfs", frontier, m_frontier, use_pull)
-        reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
         counts = (
@@ -129,20 +172,34 @@ def bfs(
     return depth, levels, n_push, n_pull
 
 
-@partial(jax.jit, static_argnames=("max_levels", "alpha"))
 def bc(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
     source: jnp.ndarray,
     max_levels: int = 64,
-    alpha: float = 15.0,
+    alpha: Optional[float] = None,
+    schedule: str = "uniform",
 ):
     """Brandes betweenness centrality from one source (paper Alg. 3 + the
     standard dependency back-propagation).  Forward phase = BFS computing
     depth δ and shortest-path counts σ; backward phase accumulates
-    dependencies level by level.
+    dependencies level by level.  ``schedule`` / ``alpha`` as in :func:`bfs`.
 
     Returns (bc_scores f32[n], depth, sigma)."""
+    schedule, alpha = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs")
+    return _bc_jit(dg, bg_pull, source, max_levels, alpha, schedule)
+
+
+@partial(jax.jit, static_argnames=("max_levels", "alpha", "schedule"))
+def _bc_jit(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_levels: int,
+    alpha: float,
+    schedule: str,
+):
     n = dg.n
     depth0 = jnp.full((n,), INF_DEPTH, jnp.int32).at[source].set(0)
     sigma0 = jnp.zeros((n,), jnp.float32).at[source].set(1.0)
@@ -158,13 +215,14 @@ def bc(
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
         _emit_frontier("bc", frontier, m_frontier, use_pull)
-        reached = _frontier_reach(dg, bg_pull, frontier, use_pull)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
         # σ[dst] += Σ σ[src] over tree edges (src on frontier level).
         path_msgs = jnp.where(frontier > 0, sigma, 0.0)
         sig_in = (
-            tocab.tocab_pull(bg_pull, path_msgs, reduce="sum")
+            tocab.tocab_pull(bg_pull, path_msgs, reduce="sum",
+                             schedule=schedule)
             if bg_pull is not None
             else tocab.baseline_pull(dg, path_msgs, reduce="sum")
         )
@@ -199,16 +257,29 @@ def bc(
     return bc_scores, depth, sigma
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
 def sssp(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
     source: jnp.ndarray,
     max_iters: int = 0,
+    schedule: str = "uniform",
 ):
     """Bellman-Ford SSSP (min-plus semiring), TOCAB pull per iteration.
 
     ``dg`` must carry edge weights.  Returns (dist f32[n], iters)."""
+    schedule = tocab.resolve_schedule(
+        bg_pull if bg_pull is not None else dg, schedule, workload="bfs")
+    return _sssp_jit(dg, bg_pull, source, max_iters, schedule)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "schedule"))
+def _sssp_jit(
+    dg: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    source: jnp.ndarray,
+    max_iters: int,
+    schedule: str,
+):
     n = dg.n
     max_iters = max_iters or n
     inf = jnp.float32(jnp.inf)
@@ -224,7 +295,8 @@ def sssp(
         if _callbacks_enabled():
             jax.debug.callback(partial(_record_iteration, "sssp"))
         relaxed = (
-            tocab.tocab_pull(bg_pull, dist, reduce="min", combine=plus)
+            tocab.tocab_pull(bg_pull, dist, reduce="min", combine=plus,
+                             schedule=schedule)
             if bg_pull is not None
             else tocab.baseline_pull(dg, dist, reduce="min", combine=plus)
         )
@@ -235,18 +307,31 @@ def sssp(
     return dist, iters
 
 
-@partial(jax.jit, static_argnames=("max_iters",))
 def connected_components(
     dg: DeviceGraph,
     dg_t: DeviceGraph,
     bg_pull: Optional[BlockedGraph] = None,
     max_iters: int = 0,
+    schedule: str = "uniform",
 ):
     """Weakly-connected components via min-label propagation (all-active,
     min semiring — the same blocked pull engine as SSSP).
 
     ``dg_t`` is the transpose edge set (labels must flow both directions
     for *weak* connectivity).  Returns (labels int32[n], iters)."""
+    schedule = tocab.resolve_schedule(
+        bg_pull if bg_pull is not None else dg, schedule, workload="bfs")
+    return _cc_jit(dg, dg_t, bg_pull, max_iters, schedule)
+
+
+@partial(jax.jit, static_argnames=("max_iters", "schedule"))
+def _cc_jit(
+    dg: DeviceGraph,
+    dg_t: DeviceGraph,
+    bg_pull: Optional[BlockedGraph],
+    max_iters: int,
+    schedule: str,
+):
     n = dg.n
     max_iters = max_iters or n
     labels0 = jnp.arange(n, dtype=jnp.float32)
@@ -254,7 +339,8 @@ def connected_components(
 
     def relax(labels):
         fwd = (
-            tocab.tocab_pull(bg_pull, labels, reduce="min", combine=ignore)
+            tocab.tocab_pull(bg_pull, labels, reduce="min", combine=ignore,
+                             schedule=schedule)
             if bg_pull is not None
             else tocab.baseline_pull(dg, labels, reduce="min", combine=ignore)
         )

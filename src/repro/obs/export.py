@@ -16,6 +16,7 @@ __all__ = [
     "BENCH_SCHEMA",
     "git_sha",
     "run_fingerprint",
+    "versioned_payload",
     "bench_payload",
     "write_json",
     "write_jsonl",
@@ -52,6 +53,17 @@ def run_fingerprint() -> dict:
     }
 
 
+def versioned_payload(schema: str, name: str, **sections) -> dict:
+    """Skeleton of every schema-versioned artifact this repo writes
+    (``repro.obs.bench/v1`` benchmarks, ``repro.tune.db/v1`` tuning DB):
+    schema tag + name + environment fingerprint, then the caller's sections
+    (``None``-valued sections are dropped)."""
+    payload = {"schema": schema, "name": name,
+               "fingerprint": run_fingerprint()}
+    payload.update((k, v) for k, v in sections.items() if v is not None)
+    return payload
+
+
 def bench_payload(name: str, records: Iterable[dict],
                   metrics: Optional[dict] = None,
                   spans: Optional[list] = None) -> dict:
@@ -59,17 +71,8 @@ def bench_payload(name: str, records: Iterable[dict],
 
     ``records`` — the per-measurement rows (name + numeric fields);
     ``metrics`` — a registry snapshot; ``spans`` — trace events."""
-    payload = {
-        "schema": BENCH_SCHEMA,
-        "name": name,
-        "fingerprint": run_fingerprint(),
-        "records": list(records),
-    }
-    if metrics is not None:
-        payload["metrics"] = metrics
-    if spans is not None:
-        payload["spans"] = spans
-    return payload
+    return versioned_payload(BENCH_SCHEMA, name, records=list(records),
+                             metrics=metrics, spans=spans)
 
 
 def write_json(path: str, payload: dict) -> str:

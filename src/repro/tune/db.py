@@ -1,0 +1,122 @@
+"""Persistent tuning database: schema-versioned JSON under
+``experiments/tune/`` plus an in-process plan cache.
+
+One file (``TUNE_DB.json``) holds every tuned entry, keyed by
+``graph-fingerprint / device-kind / dtype / workload`` — the same identity
+axes XLA's autotuning cache uses.  Writes go through
+:func:`repro.obs.export.write_json` (atomic replace) and carry the run
+fingerprint, so a CI-cached DB can be told apart from one tuned on
+different hardware.
+"""
+from __future__ import annotations
+
+import os
+import time
+from typing import Optional
+
+import jax
+
+from repro.obs import export as obs_export
+from repro.obs.metrics import registry as _obs
+
+__all__ = [
+    "DB_SCHEMA",
+    "DB_FILENAME",
+    "default_dir",
+    "db_path",
+    "device_key",
+    "entry_key",
+    "load",
+    "save",
+    "get_entry",
+    "put_entry",
+    "clear_cache",
+]
+
+#: bump on any incompatible change to the TUNE_DB.json layout
+DB_SCHEMA = "repro.tune.db/v1"
+DB_FILENAME = "TUNE_DB.json"
+
+# (abspath -> (mtime, db dict)) — the in-process cache; schedule="auto"
+# resolution must not re-read the file per engine call.
+_CACHE: dict = {}
+
+
+def default_dir() -> str:
+    """DB directory: ``$REPRO_TUNE_DIR`` or ``experiments/tune`` (cwd)."""
+    return os.environ.get("REPRO_TUNE_DIR") or os.path.join(
+        "experiments", "tune")
+
+
+def db_path(db_dir: Optional[str] = None) -> str:
+    return os.path.join(db_dir or default_dir(), DB_FILENAME)
+
+
+def device_key() -> str:
+    """Device identity half of the entry key (spaces sanitized)."""
+    devs = jax.devices()
+    kind = devs[0].device_kind if devs else "none"
+    return str(kind).strip().replace(" ", "-").lower()
+
+
+def entry_key(graph_fp: str, device: Optional[str] = None,
+              dtype: str = "float32", workload: str = "pagerank") -> str:
+    return f"{graph_fp}/{device or device_key()}/{dtype}/{workload}"
+
+
+def _empty() -> dict:
+    return obs_export.versioned_payload(DB_SCHEMA, "tune_db", entries={})
+
+
+def load(path: Optional[str] = None, use_cache: bool = True) -> dict:
+    """Read the DB (empty shell if the file doesn't exist).  Cached by
+    (path, mtime): touching the file invalidates, in-process writers update
+    the cache themselves via :func:`save`."""
+    path = os.path.abspath(path or db_path())
+    try:
+        mtime = os.stat(path).st_mtime_ns
+    except OSError:
+        return _empty()
+    if use_cache:
+        hit = _CACHE.get(path)
+        if hit is not None and hit[0] == mtime:
+            _obs.counter("tune.db_reads", "tuning-db loads").inc(source="cache")
+            return hit[1]
+    db = obs_export.read_json(path)
+    if db.get("schema") != DB_SCHEMA:
+        raise ValueError(
+            f"{path}: schema {db.get('schema')!r} != {DB_SCHEMA!r} — "
+            "delete or re-tune (the DB is a cache, not a source of truth)")
+    _CACHE[path] = (mtime, db)
+    _obs.counter("tune.db_reads", "tuning-db loads").inc(source="disk")
+    return db
+
+
+def save(db: dict, path: Optional[str] = None) -> str:
+    path = os.path.abspath(path or db_path())
+    obs_export.write_json(path, db)
+    _CACHE[path] = (os.stat(path).st_mtime_ns, db)
+    _obs.counter("tune.db_writes", "tuning-db saves").inc()
+    return path
+
+
+def get_entry(key: str, path: Optional[str] = None) -> Optional[dict]:
+    return load(path).get("entries", {}).get(key)
+
+
+def put_entry(key: str, entry: dict, path: Optional[str] = None,
+              persist: bool = True) -> dict:
+    """Insert/replace one entry (stamped with key + creation time) and, by
+    default, persist immediately — a crashed sweep keeps finished work."""
+    path = os.path.abspath(path or db_path())
+    db = load(path)
+    entry = dict(entry, key=key, created=entry.get("created") or time.time())
+    db.setdefault("entries", {})[key] = entry
+    if persist:
+        save(db, path)
+    return entry
+
+
+def clear_cache():
+    """Drop the in-process DB cache (tests / cross-process refresh)."""
+    _CACHE.clear()

@@ -1,0 +1,159 @@
+"""Empirical trial runner: time surviving candidates, record everything,
+pick the winner.
+
+All timing flows through ``repro.obs`` spans (``tune.trial`` spans with
+``Span.block`` attributing device wait) — no ad-hoc ``time.perf_counter``
+bookkeeping — so trials land in the same registry/trace stream as every
+other hot path and export with benchmark artifacts.  Blocked graphs are
+built once per (graph, direction, block_size, thresholds) and shared
+across candidates.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# NB: import the submodules explicitly — ``repro.core`` re-exports the
+# ``spmv`` *function*, which shadows the submodule attribute of the package
+from repro.core.spmv import spmv as _spmv_fn
+from repro.core import traversal as _traversal
+from repro.core.graph import DeviceGraph, Graph, graph_fingerprint
+from repro.core.pagerank import pagerank_iteration
+from repro.core.partition import build_blocked
+from repro.obs import trace as obs_trace
+from repro.obs.metrics import registry as _obs
+
+from .space import Candidate, TrialBudget
+
+__all__ = ["Trial", "run_trial", "time_fn", "build_for", "clear_cache"]
+
+# (graph_fp, direction, block_size, thresholds) -> BlockedGraph
+_BG_MEMO: dict = {}
+# graph_fp -> DeviceGraph
+_DG_MEMO: dict = {}
+
+
+@dataclasses.dataclass(frozen=True)
+class Trial:
+    """One timed candidate (JSON round-trippable via ``to_json``)."""
+
+    candidate: Candidate
+    us: float  # median wall-clock per call, microseconds
+    reps: int
+    warmup: int
+    workload: str
+    edges_per_s: float
+
+    def to_json(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["candidate"] = self.candidate.to_json()
+        return d
+
+    @classmethod
+    def from_json(cls, d: dict) -> "Trial":
+        d = dict(d)
+        d["candidate"] = Candidate.from_json(d["candidate"])
+        return cls(**{k: v for k, v in d.items()
+                      if k in {f.name for f in dataclasses.fields(cls)}})
+
+
+def clear_cache():
+    _BG_MEMO.clear()
+    _DG_MEMO.clear()
+
+
+def build_for(g: Graph, candidate: Candidate):
+    """(DeviceGraph, BlockedGraph-or-None) for one candidate, memoized."""
+    fp = graph_fingerprint(g)
+    dg = _DG_MEMO.get(fp)
+    if dg is None:
+        dg = _DG_MEMO[fp] = DeviceGraph.from_host(g)
+    if not candidate.blocked:
+        return dg, None
+    key = (fp, candidate.direction, candidate.block_size,
+           candidate.bin_thresholds)
+    bg = _BG_MEMO.get(key)
+    if bg is None:
+        bg = _BG_MEMO[key] = build_blocked(
+            g, block_size=candidate.block_size,
+            direction=candidate.direction,
+            bin_thresholds=candidate.bin_thresholds)
+    return dg, bg
+
+
+def _pr_variant(candidate: Candidate) -> str:
+    if candidate.engine == "base":
+        return "base" if candidate.direction == "pull" else "push"
+    if candidate.engine == "cb":
+        return "cb"
+    return "gc-pull" if candidate.direction == "pull" else "gc-push"
+
+
+def _workload_fn(workload: str, g: Graph, dg, bg, candidate: Candidate):
+    """Jitted callable + args for one (workload, candidate) pairing."""
+    if workload == "pagerank":
+        rank = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+        variant = _pr_variant(candidate)
+        fn = jax.jit(lambda r: pagerank_iteration(
+            variant, dg, bg, r, dg.out_degree,
+            schedule=candidate.schedule))
+        return fn, (rank,)
+    if workload == "spmv":
+        x = jnp.ones((g.n,), jnp.float32)
+        variant = _pr_variant(candidate)
+        fn = jax.jit(lambda xx: _spmv_fn(
+            dg, bg, xx, variant=variant, schedule=candidate.schedule,
+            dense_impl=candidate.dense_impl))
+        return fn, (x,)
+    if workload == "bfs":
+        fn = jax.jit(lambda s: _traversal.bfs(
+            dg, bg, s, alpha=candidate.alpha,
+            schedule=candidate.schedule))
+        return fn, (jnp.int32(0),)
+    raise ValueError(f"unknown workload {workload!r}")
+
+
+def time_fn(fn, args: Tuple, warmup: int, reps: int, **span_attrs) -> float:
+    """Median wall-clock (µs) over ``reps`` measured calls, each one a
+    ``tune.trial`` obs span with the device wait blocked inside it."""
+    for _ in range(max(warmup, 0)):
+        jax.block_until_ready(fn(*args))
+    durs = []
+    for rep in range(max(reps, 1)):
+        with obs_trace.span("tune.trial", rep=rep, **span_attrs) as sp:
+            sp.block(fn(*args))
+        durs.append(sp.dur_s)
+    durs.sort()
+    return durs[len(durs) // 2] * 1e6
+
+
+def run_trial(g: Graph, candidate: Candidate, workload: str = "pagerank",
+              budget: Optional[TrialBudget] = None,
+              graph_name: Optional[str] = None,
+              warmup: int = 1, reps: int = 3) -> Trial:
+    """Build, time, and record one candidate.
+
+    Engines with unusable combinations surface as exceptions — the sweep
+    in ``repro.tune.tuner`` converts those into skipped trials."""
+    if budget is not None:
+        warmup, reps = budget.warmup, budget.reps
+    dg, bg = build_for(g, candidate)
+    fn, args = _workload_fn(workload, g, dg, bg, candidate)
+    us = time_fn(fn, args, warmup, reps,
+                 workload=workload, candidate=candidate.key(),
+                 graph=graph_name or graph_fingerprint(g))
+    eps = g.m / max(us * 1e-6, 1e-12)
+    labels = dict(workload=workload, candidate=candidate.key())
+    if graph_name:
+        labels["graph"] = graph_name
+    _obs.counter("tune.trials", "empirical tuner trials run").inc(
+        workload=workload, **({"graph": graph_name} if graph_name else {}))
+    _obs.histogram("tune.trial_us", "tuner trial medians").observe(
+        us, **labels)
+    _obs.gauge("tune.trial_edges_per_s", "tuner trial throughput").set(
+        eps, **labels)
+    return Trial(candidate=candidate, us=us, reps=reps, warmup=warmup,
+                 workload=workload, edges_per_s=eps)

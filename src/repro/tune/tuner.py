@@ -1,0 +1,151 @@
+"""Tuner orchestration: search space → analytic prune → trials → DB entry.
+
+``tune_graph`` is the unit of work (one graph × one workload); ``tune``
+sweeps a suite and returns a summary whose ``new_trials`` count lets CI
+(and the acceptance test) assert that a second run is served entirely from
+the persistent DB.
+"""
+from __future__ import annotations
+
+import sys
+from typing import Dict, Optional
+
+from repro.core.graph import Graph, graph_fingerprint
+from repro.obs.metrics import registry as _obs
+
+from . import analytic, db, runner
+from .space import BUDGETS, Candidate, SearchSpace, TrialBudget, default_candidate
+
+__all__ = ["tune_graph", "tune", "choose"]
+
+
+def choose(trials: list) -> Optional[runner.Trial]:
+    """Winner = lowest median; deterministic tie-break on the candidate key
+    so re-runs of an identical sweep pick the identical config."""
+    if not trials:
+        return None
+    return min(trials, key=lambda t: (t.us, t.candidate.key()))
+
+
+def _record_chosen(entry: dict, graph_name: str):
+    """Tuner decision → obs registry (satellite: `repro.obs.report` can
+    show trials run / pruned counts / the chosen config as a labeled
+    gauge)."""
+    c = entry["chosen"]
+    _obs.gauge(
+        "tune.chosen", "chosen tuner config (value = median µs)",
+    ).set(entry["best_us"], graph=graph_name, workload=entry["workload"],
+          engine=c["engine"], direction=c["direction"],
+          schedule=c["schedule"], block_size=c["block_size"])
+    _obs.gauge("tune.chosen_block_size", "tuned TOCAB block size").set(
+        c["block_size"], graph=graph_name, workload=entry["workload"])
+    _obs.gauge("tune.non_default", "1 when tuning beat the hard-coded "
+               "default config").set(
+        float(entry["non_default"]), graph=graph_name,
+        workload=entry["workload"])
+
+
+def tune_graph(
+    g: Graph,
+    graph_name: str,
+    workload: str = "pagerank",
+    space: Optional[SearchSpace] = None,
+    budget: TrialBudget = BUDGETS["small"],
+    db_dir: Optional[str] = None,
+    dtype: str = "float32",
+    force: bool = False,
+    default: Optional[Candidate] = None,
+    verbose: bool = False,
+) -> dict:
+    """Tune one (graph, workload); returns the DB entry (existing one on a
+    DB hit).  The entry records every trial, the analytic prune, and the
+    chosen candidate."""
+    path = db.db_path(db_dir)
+    fp = graph_fingerprint(g)
+    key = db.entry_key(fp, dtype=dtype, workload=workload)
+    if not force:
+        hit = db.get_entry(key, path)
+        if hit is not None:
+            _obs.counter("tune.db_hits", "tune requests served from the "
+                         "persistent DB").inc(workload=workload)
+            return dict(hit, db_hit=True)
+
+    space = space or SearchSpace()
+    cands = space.candidates(workload)
+    kept, pruned = analytic.prune(
+        g, cands, prune_ratio=budget.prune_ratio,
+        graph_name=graph_name, workload=workload)
+    kept = kept[: budget.max_trials]
+    trials, skipped = [], []
+    for c in kept:
+        try:
+            trials.append(runner.run_trial(
+                g, c, workload=workload, budget=budget,
+                graph_name=graph_name))
+            if verbose:
+                print(f"#   trial {graph_name}/{workload} {c.key()}: "
+                      f"{trials[-1].us:.0f}us", file=sys.stderr)
+        except Exception as e:  # unusable combo (e.g. kernel unavailable)
+            skipped.append({"candidate": c.to_json(), "error": repr(e)})
+            _obs.counter("tune.trials_skipped",
+                         "candidates that failed to run").inc(
+                workload=workload)
+    best = choose(trials)
+    if best is None:
+        raise RuntimeError(
+            f"no runnable candidate for {graph_name}/{workload} "
+            f"({len(pruned)} pruned, {len(skipped)} failed)")
+    default = default or default_candidate()
+    entry = {
+        "schema": db.DB_SCHEMA,
+        "graph": graph_name,
+        "graph_fp": fp,
+        "device_kind": db.device_key(),
+        "dtype": dtype,
+        "workload": workload,
+        "budget": budget.name,
+        "chosen": best.candidate.to_json(),
+        "best_us": best.us,
+        "non_default": best.candidate != default,
+        "candidates": len(cands),
+        "pruned_analytic": len(pruned),
+        "trials": [t.to_json() for t in trials],
+        "skipped": skipped,
+    }
+    db.put_entry(key, entry, path)
+    _record_chosen(entry, graph_name)
+    return dict(entry, db_hit=False)
+
+
+def tune(
+    graphs: Dict[str, Graph],
+    workloads=("pagerank", "spmv"),
+    budget: str = "small",
+    space: Optional[SearchSpace] = None,
+    db_dir: Optional[str] = None,
+    cfg=None,
+    force: bool = False,
+    verbose: bool = False,
+) -> dict:
+    """Sweep a graph suite; returns a summary dict:
+
+    ``{"entries": [...], "new_trials": N, "pruned": N, "db_hits": N}``."""
+    tb = BUDGETS[budget] if isinstance(budget, str) else budget
+    space = space or SearchSpace.for_budget(tb.name, cfg)
+    default = default_candidate(getattr(cfg, "block_size", 2048))
+    entries, new_trials, pruned, db_hits = [], 0, 0, 0
+    for gname, g in graphs.items():
+        for wl in workloads:
+            entry = tune_graph(
+                g, gname, workload=wl, space=space, budget=tb,
+                db_dir=db_dir, force=force, default=default,
+                verbose=verbose)
+            entries.append(entry)
+            if entry.get("db_hit"):
+                db_hits += 1
+            else:
+                new_trials += len(entry["trials"])
+                pruned += entry["pruned_analytic"]
+    return {"entries": entries, "new_trials": new_trials,
+            "pruned": pruned, "db_hits": db_hits,
+            "db_path": db.db_path(db_dir)}
