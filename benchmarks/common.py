@@ -67,14 +67,42 @@ def balance_mix_graph(n: int = 16384, deg: int = 24, seed: int = 0) -> Graph:
 _CACHE: dict = {}
 
 
+def tuned_block_config(g, name: str):
+    """(block_size, bin_thresholds, source) for a suite graph.
+
+    Consults the persistent tuning DB (``experiments/tune/TUNE_DB.json``)
+    so figure sweeps start from the tuned layout instead of the hard-coded
+    ``BLOCK_SIZE``; untuned graphs (fresh checkouts, CI perf gate) fall
+    back to the defaults — the DB is not committed, so gate baselines are
+    unaffected."""
+    try:
+        from repro.tune.plan import resolve_plan
+
+        plan = resolve_plan(g, workload="pagerank")
+    except Exception:
+        plan = None
+    if plan is None or not plan.candidate.blocked:
+        return BLOCK_SIZE, None, "default"
+    c = plan.candidate
+    return c.block_size, c.bin_thresholds, plan.source
+
+
 def get_graph(name: str):
     if name not in _CACHE:
         g = SUITE[name]()
+        block_size, thresholds, source = tuned_block_config(g, name)
+        if source != "default":
+            print(f"# {name}: tuned layout block_size={block_size} "
+                  f"bin_thresholds={thresholds} ({source})")
+        _obs.gauge("bench.block_size", "TOCAB block size the figure "
+                   "sweeps build with (tuned when the DB has an entry)"
+                   ).set(block_size, graph=name, source=source)
+        kw = {} if thresholds is None else {"bin_thresholds": thresholds}
         _CACHE[name] = (
             g,
             DeviceGraph.from_host(g),
-            build_blocked(g, block_size=BLOCK_SIZE, direction="pull"),
-            build_blocked(g, block_size=BLOCK_SIZE, direction="push"),
+            build_blocked(g, block_size=block_size, direction="pull", **kw),
+            build_blocked(g, block_size=block_size, direction="push", **kw),
         )
     return _CACHE[name]
 

@@ -52,6 +52,56 @@ def _cache_counters(gname: str, variant: str) -> dict:
                 dram_per_edge=r["dram_per_edge"])
 
 
+def fig5_accum():
+    """Fig. 5 (accumulation): slab vs fused TOCAB accumulation.
+
+    The slab path materialises a ``(num_blocks, local_budget)`` partial
+    slab in HBM (phase 2) and segment-reduces it back (phase 3); the fused
+    path keeps the accumulator tile resident and never writes partials.
+    Reports the slab phase split, slab-vs-fused edges/s for pull and push,
+    the cache model's DRAM-traffic prediction for both variants, and the
+    partial-slab bytes the fused path never round-trips."""
+    import jax
+    from repro.core import tocab
+
+    gname = "rmat14"  # the fig6-smoke graph
+    g, dg, bg, bgp = get_graph(gname)
+    x = jnp.ones((g.n,), jnp.float32)
+
+    # Slab phase split (pull): phase-2 partials (the HBM slab write) vs
+    # phase-3 flat segment reduce.
+    p2 = jax.jit(lambda v: tocab.tocab_pull_partials(bg, v, "sum", None))
+    partials = p2(x)
+    slab_mb = partials.size * partials.dtype.itemsize / 2**20
+    emit(f"fig5_accum/{gname}/pull/slab/phase2", timeit(p2, x),
+         partial_slab_mb=slab_mb, blocks=bg.num_blocks)
+    emit(f"fig5_accum/{gname}/pull/slab/phase3",
+         timeit(jax.jit(lambda p: tocab.reduce_partials(bg, p)), partials))
+
+    # End-to-end slab vs fused (one kernel, epilogue-fused apply elided).
+    for direction, bgv, fn in (("pull", bg, tocab.tocab_pull),
+                               ("push", bgp, tocab.tocab_push)):
+        times = {
+            impl: timeit(jax.jit(
+                lambda v, i=impl, b=bgv, f=fn: f(b, v, impl=i)), x)
+            for impl in ("slab", "fused")
+        }
+        for impl, us in times.items():
+            emit(f"fig5_accum/{gname}/{direction}/{impl}", us,
+                 speedup=times["slab"] / us,
+                 edges_per_s=g.m / (us * 1e-6))
+
+    # Cache-model prediction: the fused stream drops the partial-slab
+    # write+read traffic entirely.
+    model = {v: simulate_pagerank_variant(g, v, _MODEL_CFG,
+                                          block_size=_MODEL_BLOCK)
+             for v in ("tocab", "fused")}
+    for v, r in model.items():
+        emit(f"fig5_accum/{gname}/model/{v}", 0.0,
+             dram_per_edge=r["dram_per_edge"],
+             vs_slab=r["dram_per_edge"] / model["tocab"]["dram_per_edge"])
+
+
 def fig6_pagerank():
     """Fig. 6: PR per-iteration speedup over Base, per graph × variant."""
     for gname in SUITE:
@@ -216,8 +266,8 @@ def table4_partition_counts():
     scratchpad-sized shards (48KB / 8B per vertex entry)."""
     cusha_shard_vertices = 48 * 1024 // 8
     for gname in SUITE:
-        g, *_ = get_graph(gname)
-        gc_blocks = -(-g.n // BLOCK_SIZE)
+        g, _, bg, _ = get_graph(gname)
+        gc_blocks = bg.num_blocks
         # CuSha CW format ≈ 2.5× CSR memory (paper §5)
         csr_bytes = 4 * (g.n + 1 + g.m * 2)
         emit(f"table4/partitions/{gname}", 0.0,
@@ -254,7 +304,8 @@ def ablation_blocking():
                  blocks=blocks[name])
 
 
-ALL = [fig6_pagerank, fig7_spmv, fig8_bc, fig8_balance, fig9_cache_missrate,
+ALL = [fig5_accum, fig6_pagerank, fig7_spmv, fig8_bc, fig8_balance,
+       fig9_cache_missrate,
        fig10_dram_per_edge, fig11_blocksize,
        table3_framework_comparison, table4_partition_counts,
        ablation_blocking]

@@ -29,6 +29,7 @@ class GraphCageCfg:
     # sweeps around this config's defaults, and where the DB persists
     tune_block_sizes: tuple = (1024, 2048, 4096, 8192, 16384)
     tune_alphas: tuple = (4.0, 15.0, 64.0)
+    tune_impls: tuple = ("slab", "fused")
     tune_db_dir: str = "experiments/tune"
 
 

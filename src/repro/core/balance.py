@@ -189,6 +189,21 @@ def require_schedule(bg: BlockedGraph) -> BlockSchedule:
     return bg.schedule
 
 
+def fused_block_order(bg: BlockedGraph) -> Tuple[int, ...]:
+    """Bin-major visit order for the fused engines: dense → medium → sparse.
+
+    The fused pipeline streams blocks back-to-back through one resident
+    accumulator, so the heavy (dense) blocks go first — their gather windows
+    are issued while the prefetch queue is still deep, and the short sparse
+    tail can't leave the pipeline draining behind a late straggler.  Only
+    valid where block order cannot change results: push (disjoint destination
+    windows) always; pull only for order-insensitive semirings (min/max).
+    """
+    sched = require_schedule(bg)
+    return (sched.blocks_in(BIN_DENSE) + sched.blocks_in(BIN_MEDIUM)
+            + sched.blocks_in(BIN_SPARSE))
+
+
 def default_dense_impl() -> str:
     """Pallas tile kernel on TPU; chunked one-hot matmul elsewhere (the
     interpret-mode Pallas path pads features to the 128 lane width, which is

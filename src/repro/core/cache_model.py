@@ -16,6 +16,9 @@ The model captures precisely the effect the paper measures:
   writes of partials → repeated traffic ∝ num_blocks.
 * ``tocab`` — confined reads + dense compacted partial writes + one
   sequential reduction pass (reads partials, writes sums).
+* ``fused`` — the fused TOCAB pipeline: confined reads only; partials
+  accumulate in a fast-memory-resident tile, so the partial write/read
+  traffic terms vanish and the result spills once, sequentially.
 """
 from __future__ import annotations
 
@@ -31,7 +34,7 @@ from .partition import build_blocked
 
 __all__ = ["CacheConfig", "CacheSim", "simulate_pagerank_variant", "GAIL_VARIANTS"]
 
-GAIL_VARIANTS = ("base", "cb", "tocab")
+GAIL_VARIANTS = ("base", "cb", "tocab", "fused")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -122,7 +125,7 @@ def simulate_pagerank_variant(
         order = np.argsort(dst, kind="stable")
         sim.access_array(A_CONTRIB, src[order])
         sim.access_sequential(A_SUMS, n, write=True)
-    elif variant in ("cb", "tocab"):
+    elif variant in ("cb", "tocab", "fused"):
         if block_size is None:
             # paper's GPU choice: block sized so the window fits L2
             block_size = max(256, cfg.capacity_bytes // 8 // 4)
@@ -139,16 +142,25 @@ def simulate_pagerank_variant(
             if variant == "tocab":
                 # dense partial slab writes (compacted local IDs)
                 sim.access_array(A_PART + b * bg.local_budget * 4, cij[b][em], write=True)
-            else:
+            elif variant == "cb":
                 # conventional CB: sparse *global-width* writes per block —
                 # the repeated-access overhead the paper calls out.
                 gdst = idmap[b][cij[b][em]]
                 sim.access_array(A_SUMS, gdst, write=True)
+            # fused: partials never leave the resident accumulator — no
+            # partial traffic term at all.
         if variant == "tocab":
             # reduction phase: sequential read of all partials, sequential
             # write of sums (paper Fig. 5 — fully coalesced).
             total_locals = int(nloc.sum())
             sim.access_sequential(A_PART, total_locals)
+            sim.access_sequential(A_SUMS, n, write=True)
+            stream_lines += (total_locals * 4) // lb + 1  # id_map stream
+        elif variant == "fused":
+            # epilogue spill: the resident output tile is written once,
+            # sequentially; id_map windows still stream in per block to
+            # address the fold.
+            total_locals = int(nloc.sum())
             sim.access_sequential(A_SUMS, n, write=True)
             stream_lines += (total_locals * 4) // lb + 1  # id_map stream
     else:

@@ -26,7 +26,8 @@ __all__ = ["pagerank", "pagerank_iteration", "PR_VARIANTS"]
 PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
 
-def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform"):
+def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform",
+                 impl="slab", epilogue=None):
     # PR is unweighted: the UNWEIGHTED sentinel combine ignores any edge
     # values the graph carries (and keeps the dense tile path eligible).
     kw = dict(reduce="sum", combine=_unweighted)
@@ -37,9 +38,11 @@ def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform"):
     if variant == "cb":
         return tocab.cb_pull(bg, contributions, **kw)
     if variant == "gc-pull":
-        return tocab.tocab_pull(bg, contributions, schedule=schedule, **kw)
+        return tocab.tocab_pull(bg, contributions, schedule=schedule,
+                                impl=impl, epilogue=epilogue, **kw)
     if variant == "gc-push":
-        return tocab.tocab_push(bg, contributions, schedule=schedule, **kw)
+        return tocab.tocab_push(bg, contributions, schedule=schedule,
+                                impl=impl, epilogue=epilogue, **kw)
     raise ValueError(f"unknown PR variant {variant!r}")
 
 
@@ -52,14 +55,26 @@ def pagerank_iteration(
     damping: float = 0.85,
     handle_dangling: bool = True,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
-    """One PR iteration: contributions → gather/scatter → apply."""
+    """One PR iteration: contributions → gather/scatter → apply.
+
+    GraphCage variants hand the apply step to the engine as an affine
+    epilogue ``sums*damping + add`` — the fused impl folds it into the
+    kernel's final block visit, the slab impl applies the identical
+    expression as a trailing pass, so both stay bit-identical.  Dangling
+    mass is known before the gather (it only reads ``rank``), which is what
+    lets the apply collapse into one affine form."""
     n = rank.shape[0]
     safe_deg = jnp.maximum(out_degree, 1).astype(rank.dtype)
     contributions = rank / safe_deg
     contributions = jnp.where(out_degree > 0, contributions, 0.0)
-    sums = _gather_sums(variant, dg, bg, contributions, schedule)
     dangling = jnp.where(out_degree > 0, 0.0, rank).sum() if handle_dangling else 0.0
+    if variant in ("gc-pull", "gc-push"):
+        add = (1.0 - damping) / n + damping * (dangling / n)
+        return _gather_sums(variant, dg, bg, contributions, schedule,
+                            impl, epilogue=(damping, add))
+    sums = _gather_sums(variant, dg, bg, contributions, schedule)
     return (1.0 - damping) / n + damping * (sums + dangling / n)
 
 
@@ -72,23 +87,28 @@ def pagerank(
     max_iters: int = 200,
     handle_dangling: bool = True,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """Iterate PR until the L1 delta falls below ``tol``.
 
-    Returns (rank, iterations).  ``schedule="auto"`` consults the tuning DB
-    (``repro.tune``) via the graph's build-time fingerprint; resolution
-    happens here, outside jit, so the jit cache is keyed on the concrete
-    schedule and a re-tune takes effect on the next call."""
-    schedule = tocab.resolve_schedule(
-        bg if bg is not None else dg, schedule, workload="pagerank")
+    Returns (rank, iterations).  ``schedule="auto"`` / ``impl="auto"``
+    consult the tuning DB (``repro.tune``) via the graph's build-time
+    fingerprint; resolution happens here, outside jit, so the jit cache is
+    keyed on the concrete choices and a re-tune takes effect on the next
+    call."""
+    obj = bg if bg is not None else dg
+    rs = tocab.resolve_schedule(obj, schedule, workload="pagerank")
+    ri = tocab.resolve_impl(obj, impl, workload="pagerank")
+    rs, ri = tocab._reconcile_fused(rs, ri, schedule, impl)
     return _pagerank_jit(
-        dg, bg, variant, damping, tol, max_iters, handle_dangling, schedule)
+        dg, bg, variant, damping, tol, max_iters, handle_dangling, rs, ri)
 
 
 @partial(
     jax.jit,
     static_argnames=(
-        "variant", "damping", "tol", "max_iters", "handle_dangling", "schedule",
+        "variant", "damping", "tol", "max_iters", "handle_dangling",
+        "schedule", "impl",
     ),
 )
 def _pagerank_jit(
@@ -100,6 +120,7 @@ def _pagerank_jit(
     max_iters: int,
     handle_dangling: bool,
     schedule: str,
+    impl: str = "slab",
 ):
     n = dg.n
     rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
@@ -112,7 +133,7 @@ def _pagerank_jit(
         rank, _, it = state
         new_rank = pagerank_iteration(
             variant, dg, bg, rank, dg.out_degree, damping, handle_dangling,
-            schedule,
+            schedule, impl,
         )
         return new_rank, jnp.abs(new_rank - rank).sum(), it + 1
 

@@ -27,20 +27,28 @@ def spmv(
     variant: str = "gc-pull",
     schedule: str = "uniform",
     dense_impl: Optional[str] = None,
+    impl: str = "slab",
+    scale=None,
 ):
     """y[dst] = Σ_{(src,dst)} A[src,dst]·x[src].
 
     ``x`` may be a vector (n,) — SpMV — or a matrix (n, d) — SpMM, which is
     the GNN aggregation primitive.  ``schedule='balanced'`` runs the blocked
-    variants with sparsity-aware per-bin strategies; ``schedule='auto'``
-    consults the tuning DB (resolved here, outside jit).  ``dense_impl``
-    forces the balanced dense-bin backend (``'pallas'`` / ``'onehot'``)."""
-    schedule = tocab.resolve_schedule(
-        bg if bg is not None else dg, schedule, workload="spmv")
-    return _spmv_jit(dg, bg, x, variant, schedule, dense_impl)
+    variants with sparsity-aware per-bin strategies; ``schedule='auto'`` /
+    ``impl='auto'`` consult the tuning DB (resolved here, outside jit).
+    ``dense_impl`` forces the balanced dense-bin backend (``'pallas'`` /
+    ``'onehot'``); ``impl='fused'`` routes the gc variants through the
+    persistent no-partial-slab pipeline.  ``scale`` fuses ``y*scale`` into
+    the engine epilogue (gc variants)."""
+    obj = bg if bg is not None else dg
+    rs = tocab.resolve_schedule(obj, schedule, workload="spmv")
+    ri = tocab.resolve_impl(obj, impl, workload="spmv")
+    rs, ri = tocab._reconcile_fused(rs, ri, schedule, impl)
+    return _spmv_jit(dg, bg, x, variant, rs, dense_impl, ri, scale)
 
 
-@partial(jax.jit, static_argnames=("variant", "schedule", "dense_impl"))
+@partial(jax.jit, static_argnames=("variant", "schedule", "dense_impl",
+                                   "impl"))
 def _spmv_jit(
     dg: DeviceGraph,
     bg: Optional[BlockedGraph],
@@ -48,16 +56,23 @@ def _spmv_jit(
     variant: str,
     schedule: str,
     dense_impl: Optional[str],
+    impl: str = "slab",
+    scale=None,
 ):
+    epilogue = None if scale is None else (scale, 0.0)
     if variant == "base":
-        return tocab.baseline_pull(dg, x, reduce="sum")
-    if variant == "push":
-        return tocab.baseline_push(dg, x, reduce="sum")
-    if variant == "cb":
-        return tocab.cb_pull(bg, x, reduce="sum")
-    if variant == "gc-pull":
+        y = tocab.baseline_pull(dg, x, reduce="sum")
+    elif variant == "push":
+        y = tocab.baseline_push(dg, x, reduce="sum")
+    elif variant == "cb":
+        y = tocab.cb_pull(bg, x, reduce="sum")
+    elif variant == "gc-pull":
         return tocab.tocab_pull(bg, x, reduce="sum", schedule=schedule,
-                                dense_impl=dense_impl)
-    if variant == "gc-push":
-        return tocab.tocab_push(bg, x, reduce="sum", schedule=schedule)
-    raise ValueError(f"unknown SpMV variant {variant!r}")
+                                dense_impl=dense_impl, impl=impl,
+                                epilogue=epilogue)
+    elif variant == "gc-push":
+        return tocab.tocab_push(bg, x, reduce="sum", schedule=schedule,
+                                impl=impl, epilogue=epilogue)
+    else:
+        raise ValueError(f"unknown SpMV variant {variant!r}")
+    return y if scale is None else y * scale

@@ -33,6 +33,7 @@ from .partition import REDUCE_IDENTITY, BlockedGraph
 __all__ = [
     "segment_reduce",
     "resolve_schedule",
+    "resolve_impl",
     "baseline_pull",
     "baseline_push",
     "cb_pull",
@@ -255,6 +256,50 @@ def resolve_schedule(bg, schedule: str, workload: str = "spmv") -> str:
     return _resolve(bg, workload=workload)
 
 
+def resolve_impl(bg, impl: str, workload: str = "spmv") -> str:
+    """``"auto"`` → the tuned plan's engine implementation (``"slab"`` or
+    ``"fused"``) for this graph, anything else passes through.  Like
+    :func:`resolve_schedule` this keys on the BlockedGraph's static
+    fingerprint, so it is safe at jit trace time."""
+    if impl != "auto":
+        return impl
+    from repro.tune.plan import resolve_impl as _resolve
+
+    return _resolve(bg, workload=workload)
+
+
+def _reconcile_fused(schedule: str, impl: str,
+                     schedule_arg: str, impl_arg: str):
+    """``fused`` × ``balanced`` is not a valid pairing — the fused pipeline
+    runs every block through one resident-accumulator kernel (its bin
+    awareness is a visit *order*, not per-bin strategies).  Whichever side
+    the tuner picked (``"auto"``) yields; an explicit conflict is an
+    error."""
+    if impl == "fused" and schedule == "balanced":
+        if impl_arg == "auto":
+            return schedule, "slab"
+        if schedule_arg == "auto":
+            return "uniform", impl
+        raise ValueError(
+            "impl='fused' is incompatible with schedule='balanced' — use "
+            "schedule='uniform' (or 'auto') with the fused pipeline")
+    return schedule, impl
+
+
+def _slab_epilogue(out, reduce: str, epilogue):
+    """Per-vertex apply step on the slab path: the same affine expression
+    the fused kernels bake into their final block visit, applied as a
+    separate (XLA-fused) pass — keeps the two impls bit-identical."""
+    if epilogue is None:
+        return out
+    if reduce != "sum":
+        raise ValueError(
+            f"epilogue fusion is affine (out*mul+add) — only the sum "
+            f"semiring supports it, got reduce={reduce!r}")
+    mul, add = epilogue
+    return out * mul + add
+
+
 @partial(jax.jit, static_argnames=("reduce", "combine", "schedule",
                                    "dense_impl"))
 def _tocab_pull_jit(
@@ -284,6 +329,8 @@ def tocab_pull(
     combine: Optional[Callable] = None,
     schedule: str = "uniform",
     dense_impl: Optional[str] = None,
+    impl: str = "slab",
+    epilogue=None,
 ):
     """``schedule='uniform'`` processes every block with the same segmented
     reduce; ``'balanced'`` dispatches each sparsity bin of the build-time
@@ -291,10 +338,26 @@ def tocab_pull(
     ``'auto'`` resolves uniform/balanced from the ``repro.tune`` tuning DB
     (falling back to uniform when this graph was never tuned).
     ``dense_impl`` forces the balanced dense-bin backend ('pallas' /
-    'onehot'; default picks per backend)."""
-    schedule = resolve_schedule(bg, schedule)
-    return _tocab_pull_jit(bg, values, reduce=reduce, combine=combine,
-                           schedule=schedule, dense_impl=dense_impl)
+    'onehot'; default picks per backend).
+
+    ``impl='fused'`` routes through the persistent single-kernel pipeline
+    (``repro.kernels.tocab_fused``): no partial slab in HBM, bit-identical
+    results; ``'auto'`` consults the tuning DB.  ``epilogue=(mul, add)``
+    fuses the per-vertex apply step ``out*mul + add`` (sum semiring only) —
+    the slab path applies the identical expression as a trailing pass."""
+    rs = resolve_schedule(bg, schedule)
+    ri = resolve_impl(bg, impl)
+    rs, ri = _reconcile_fused(rs, ri, schedule, impl)
+    if ri == "fused":
+        from repro.kernels.tocab_fused import fused_pull
+
+        _record_engine("tocab_pull_fused", "pull", bg.num_blocks, bg.m)
+        return fused_pull(bg, values, reduce, combine, epilogue)
+    if ri != "slab":
+        raise ValueError(f"unknown impl {ri!r}")
+    out = _tocab_pull_jit(bg, values, reduce=reduce, combine=combine,
+                          schedule=rs, dense_impl=dense_impl)
+    return _slab_epilogue(out, reduce, epilogue)
 
 
 @partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
@@ -350,15 +413,30 @@ def tocab_push(
     reduce: str = "sum",
     combine: Optional[Callable] = None,
     schedule: str = "uniform",
+    impl: str = "slab",
+    epilogue=None,
 ):
     """Push (Alg. 5): block by destination range; contributions of the few
     distinct sources of a block are fetched *once* through ``id_map``
     (block_contrib slab), then fanned out per edge; accumulation is confined
     to the block's destination window (conflict-free, no atomics on TPU).
-    ``schedule`` as in :func:`tocab_pull` (including ``'auto'``)."""
-    schedule = resolve_schedule(bg, schedule)
-    return _tocab_push_jit(bg, values, reduce=reduce, combine=combine,
-                           schedule=schedule)
+    ``schedule`` as in :func:`tocab_pull` (including ``'auto'``); ``impl``
+    and ``epilogue`` as in :func:`tocab_pull` — the fused push visits blocks
+    in the balance module's bin-major order (disjoint destination windows
+    keep that bit-identical)."""
+    rs = resolve_schedule(bg, schedule)
+    ri = resolve_impl(bg, impl)
+    rs, ri = _reconcile_fused(rs, ri, schedule, impl)
+    if ri == "fused":
+        from repro.kernels.tocab_fused import fused_push
+
+        _record_engine("tocab_push_fused", "push", bg.num_blocks, bg.m)
+        return fused_push(bg, values, reduce, combine, epilogue)
+    if ri != "slab":
+        raise ValueError(f"unknown impl {ri!r}")
+    out = _tocab_push_jit(bg, values, reduce=reduce, combine=combine,
+                          schedule=rs)
+    return _slab_epilogue(out, reduce, epilogue)
 
 
 # ====================================================================== #
@@ -375,15 +453,30 @@ def tocab_edge_reduce(
     flat_edge_vals: jnp.ndarray,  # (m, ...) in original edge order
     reduce: str = "sum",
     schedule: str = "uniform",
+    impl: str = "slab",
+    epilogue=None,
 ):
     """Reduce *edge* values to the compacted side (dst for pull layout)
     through the partial-slab + reduction machinery — the GNN primitive
-    (edge messages → node aggregate) in TOCAB form."""
-    schedule = resolve_schedule(bg, schedule)
+    (edge messages → node aggregate) in TOCAB form.  ``impl``/``epilogue``
+    as in :func:`tocab_pull`."""
+    rs = resolve_schedule(bg, schedule)
+    ri = resolve_impl(bg, impl)
+    schedule, ri = _reconcile_fused(rs, ri, schedule, impl)
+    if ri == "fused":
+        from repro.kernels.tocab_fused import fused_edge_reduce
+
+        _record_engine("tocab_edge_reduce_fused", bg.direction,
+                       bg.num_blocks, bg.m)
+        return fused_edge_reduce(bg, flat_edge_vals, reduce, epilogue)
+    if ri != "slab":
+        raise ValueError(f"unknown impl {ri!r}")
     if schedule == "balanced":
         from .balance import balanced_edge_reduce
 
-        return balanced_edge_reduce(bg, flat_edge_vals, reduce)
+        return _slab_epilogue(
+            balanced_edge_reduce(bg, flat_edge_vals, reduce), reduce,
+            epilogue)
     if schedule != "uniform":
         raise ValueError(f"unknown schedule {schedule!r}")
     vals = blocked_edge_values(bg, flat_edge_vals)
@@ -402,7 +495,8 @@ def tocab_edge_reduce(
         bg.flat_partial_size, reduce,
     )
     partials = partials.reshape((bg.num_blocks, bg.local_budget) + tail)
-    return reduce_partials(bg, partials, reduce)
+    return _slab_epilogue(reduce_partials(bg, partials, reduce), reduce,
+                          epilogue)
 
 
 def tocab_gather_src(bg: BlockedGraph, values: jnp.ndarray) -> jnp.ndarray:

@@ -35,14 +35,18 @@ INF_DEPTH = jnp.iinfo(jnp.int32).max // 2
 DEFAULT_ALPHA = 15.0
 
 
-def _resolve_traversal(obj, schedule: str, alpha, workload: str):
-    """Concretize ``schedule="auto"`` / ``alpha=None`` from the tuning DB.
+def _resolve_traversal(obj, schedule: str, alpha, workload: str,
+                       impl: str = "slab"):
+    """Concretize ``schedule="auto"`` / ``impl="auto"`` / ``alpha=None``
+    from the tuning DB.
 
     Runs outside jit (the public wrappers call it before dispatching to the
     jitted bodies) so the jit cache is keyed on the concrete values and a
     re-tune takes effect on the next call."""
     want_auto = schedule == "auto"
-    schedule = tocab.resolve_schedule(obj, schedule, workload=workload)
+    rs = tocab.resolve_schedule(obj, schedule, workload=workload)
+    ri = tocab.resolve_impl(obj, impl, workload=workload)
+    rs, ri = tocab._reconcile_fused(rs, ri, schedule, impl)
     if alpha is None:
         if want_auto:
             from repro.tune.plan import resolve_alpha
@@ -50,7 +54,7 @@ def _resolve_traversal(obj, schedule: str, alpha, workload: str):
             alpha = resolve_alpha(obj, workload=workload)
         else:
             alpha = DEFAULT_ALPHA
-    return schedule, float(alpha)
+    return rs, float(alpha), ri
 
 
 def _callbacks_enabled() -> bool:
@@ -92,19 +96,21 @@ def _frontier_reach(
     frontier_f32: jnp.ndarray,
     use_pull: jnp.ndarray,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """reached[dst] = max over in-edges of frontier[src]  (0/1 floats).
 
     ``use_pull`` selects TOCAB pull (dense phase) vs flat push (sparse
     phase).  Both are lowered; `lax.cond` picks at runtime — on TPU the
     pull branch is the blocked kernel, the push branch the flat one.
-    ``schedule`` must already be concrete (no ``"auto"`` here — the public
-    wrappers resolve it before tracing)."""
+    ``schedule``/``impl`` must already be concrete (no ``"auto"`` here —
+    the public wrappers resolve them before tracing)."""
 
     def pull_branch(f):
         if bg_pull is None:
             return tocab.baseline_pull(dg, f, reduce="max")
-        return tocab.tocab_pull(bg_pull, f, reduce="max", schedule=schedule)
+        return tocab.tocab_pull(bg_pull, f, reduce="max", schedule=schedule,
+                                impl=impl)
 
     def push_branch(f):
         return tocab.baseline_push(dg, f, reduce="max")
@@ -119,21 +125,22 @@ def bfs(
     max_iters: int = 0,
     alpha: Optional[float] = None,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """Direction-optimizing BFS.  ``dg``/``bg_pull`` are over Gᵀ edges
     oriented (src→dst) = (in-neighbour → vertex), i.e. the pull layout.
 
-    ``schedule="auto"`` consults the tuning DB for the pull phase's bin
-    dispatch; ``alpha=None`` takes the tuned Beamer α under ``"auto"`` and
-    the paper's 15 otherwise.
+    ``schedule="auto"`` / ``impl="auto"`` consult the tuning DB for the
+    pull phase; ``alpha=None`` takes the tuned Beamer α under ``"auto"``
+    and the paper's 15 otherwise.
 
     Returns (depth int32[n], levels int32, push_iters, pull_iters)."""
-    schedule, alpha = _resolve_traversal(
-        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs")
-    return _bfs_jit(dg, bg_pull, source, max_iters, alpha, schedule)
+    schedule, alpha, impl = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs", impl)
+    return _bfs_jit(dg, bg_pull, source, max_iters, alpha, schedule, impl)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "alpha", "schedule"))
+@partial(jax.jit, static_argnames=("max_iters", "alpha", "schedule", "impl"))
 def _bfs_jit(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
@@ -141,6 +148,7 @@ def _bfs_jit(
     max_iters: int,
     alpha: float,
     schedule: str,
+    impl: str = "slab",
 ):
     n = dg.n
     max_iters = max_iters or n
@@ -157,7 +165,8 @@ def _bfs_jit(
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
         _emit_frontier("bfs", frontier, m_frontier, use_pull)
-        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule,
+                                  impl)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
         counts = (
@@ -179,19 +188,22 @@ def bc(
     max_levels: int = 64,
     alpha: Optional[float] = None,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """Brandes betweenness centrality from one source (paper Alg. 3 + the
     standard dependency back-propagation).  Forward phase = BFS computing
     depth δ and shortest-path counts σ; backward phase accumulates
-    dependencies level by level.  ``schedule`` / ``alpha`` as in :func:`bfs`.
+    dependencies level by level.  ``schedule`` / ``alpha`` / ``impl`` as in
+    :func:`bfs`.
 
     Returns (bc_scores f32[n], depth, sigma)."""
-    schedule, alpha = _resolve_traversal(
-        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs")
-    return _bc_jit(dg, bg_pull, source, max_levels, alpha, schedule)
+    schedule, alpha, impl = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, alpha, "bfs", impl)
+    return _bc_jit(dg, bg_pull, source, max_levels, alpha, schedule, impl)
 
 
-@partial(jax.jit, static_argnames=("max_levels", "alpha", "schedule"))
+@partial(jax.jit, static_argnames=("max_levels", "alpha", "schedule",
+                                   "impl"))
 def _bc_jit(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
@@ -199,6 +211,7 @@ def _bc_jit(
     max_levels: int,
     alpha: float,
     schedule: str,
+    impl: str = "slab",
 ):
     n = dg.n
     depth0 = jnp.full((n,), INF_DEPTH, jnp.int32).at[source].set(0)
@@ -215,14 +228,15 @@ def _bc_jit(
         m_frontier = (frontier * dg.out_degree.astype(jnp.float32)).sum()
         use_pull = m_frontier > (dg.m / alpha)
         _emit_frontier("bc", frontier, m_frontier, use_pull)
-        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule)
+        reached = _frontier_reach(dg, bg_pull, frontier, use_pull, schedule,
+                                  impl)
         new_frontier = (reached > 0) & (depth >= INF_DEPTH)
         depth = jnp.where(new_frontier, level + 1, depth)
         # σ[dst] += Σ σ[src] over tree edges (src on frontier level).
         path_msgs = jnp.where(frontier > 0, sigma, 0.0)
         sig_in = (
             tocab.tocab_pull(bg_pull, path_msgs, reduce="sum",
-                             schedule=schedule)
+                             schedule=schedule, impl=impl)
             if bg_pull is not None
             else tocab.baseline_pull(dg, path_msgs, reduce="sum")
         )
@@ -263,22 +277,25 @@ def sssp(
     source: jnp.ndarray,
     max_iters: int = 0,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """Bellman-Ford SSSP (min-plus semiring), TOCAB pull per iteration.
 
     ``dg`` must carry edge weights.  Returns (dist f32[n], iters)."""
-    schedule = tocab.resolve_schedule(
-        bg_pull if bg_pull is not None else dg, schedule, workload="bfs")
-    return _sssp_jit(dg, bg_pull, source, max_iters, schedule)
+    schedule, _, impl = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, DEFAULT_ALPHA,
+        "bfs", impl)
+    return _sssp_jit(dg, bg_pull, source, max_iters, schedule, impl)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "schedule"))
+@partial(jax.jit, static_argnames=("max_iters", "schedule", "impl"))
 def _sssp_jit(
     dg: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
     source: jnp.ndarray,
     max_iters: int,
     schedule: str,
+    impl: str = "slab",
 ):
     n = dg.n
     max_iters = max_iters or n
@@ -296,7 +313,7 @@ def _sssp_jit(
             jax.debug.callback(partial(_record_iteration, "sssp"))
         relaxed = (
             tocab.tocab_pull(bg_pull, dist, reduce="min", combine=plus,
-                             schedule=schedule)
+                             schedule=schedule, impl=impl)
             if bg_pull is not None
             else tocab.baseline_pull(dg, dist, reduce="min", combine=plus)
         )
@@ -313,24 +330,27 @@ def connected_components(
     bg_pull: Optional[BlockedGraph] = None,
     max_iters: int = 0,
     schedule: str = "uniform",
+    impl: str = "slab",
 ):
     """Weakly-connected components via min-label propagation (all-active,
     min semiring — the same blocked pull engine as SSSP).
 
     ``dg_t`` is the transpose edge set (labels must flow both directions
     for *weak* connectivity).  Returns (labels int32[n], iters)."""
-    schedule = tocab.resolve_schedule(
-        bg_pull if bg_pull is not None else dg, schedule, workload="bfs")
-    return _cc_jit(dg, dg_t, bg_pull, max_iters, schedule)
+    schedule, _, impl = _resolve_traversal(
+        bg_pull if bg_pull is not None else dg, schedule, DEFAULT_ALPHA,
+        "bfs", impl)
+    return _cc_jit(dg, dg_t, bg_pull, max_iters, schedule, impl)
 
 
-@partial(jax.jit, static_argnames=("max_iters", "schedule"))
+@partial(jax.jit, static_argnames=("max_iters", "schedule", "impl"))
 def _cc_jit(
     dg: DeviceGraph,
     dg_t: DeviceGraph,
     bg_pull: Optional[BlockedGraph],
     max_iters: int,
     schedule: str,
+    impl: str = "slab",
 ):
     n = dg.n
     max_iters = max_iters or n
@@ -340,7 +360,7 @@ def _cc_jit(
     def relax(labels):
         fwd = (
             tocab.tocab_pull(bg_pull, labels, reduce="min", combine=ignore,
-                             schedule=schedule)
+                             schedule=schedule, impl=impl)
             if bg_pull is not None
             else tocab.baseline_pull(dg, labels, reduce="min", combine=ignore)
         )

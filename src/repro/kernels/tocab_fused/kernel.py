@@ -1,0 +1,293 @@
+"""Persistent Pallas kernels for the fused TOCAB pipeline.
+
+The slab engines run three kernels per iteration — phase-2 partials, the
+phase-3 segment reduce, and the per-vertex apply — with a
+``(num_blocks, local_budget, d)`` partial slab round-tripping through HBM
+between them.  These kernels fuse all three:
+
+* **pull** — grid ``(num_tiles, num_blocks)``: the *output tile* BlockSpec
+  ignores the inner (block) dimension, so the tile stays VMEM-resident
+  while every cache block streams its gather/edge/mask windows through
+  double-buffered DMA (Pallas pipelines the next block's windows while the
+  current one computes).  Each block accumulates into a local
+  ``(local_budget, d)`` register/VMEM buffer and folds it straight into the
+  resident tile via ``id_map`` — the partial slab never exists.  On the last
+  block the epilogue (``out·mul + add``: PageRank damping / SpMV scale)
+  is applied in place, so the apply kernel disappears too.
+* **push** — grid ``(num_blocks,)``: row blocking gives each block a
+  *disjoint* destination window (= the output tile), and the whole source
+  vector rides a constant BlockSpec so it is fetched once and stays
+  resident; the ``block_contrib`` gather happens in VMEM instead of
+  materializing an HBM slab.
+
+Accumulation order matches the slab engines' scatter order exactly (chunked
+``.at[].add`` in edge-slot order within a block, block-major across
+blocks), so results are bit-identical — asserted in tests/test_fused.py.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.partition import REDUCE_IDENTITY
+
+__all__ = ["fused_pull_pallas", "fused_push_pallas", "LANE"]
+
+LANE = 128  # TPU lane width; feature dims are padded to multiples of this
+
+
+def _pick_chunk(edge_budget: int, chunk: int) -> int:
+    """Largest divisor of ``edge_budget`` ≤ ``chunk`` (edge budgets are
+    128-padded, so this never degrades below 128 for the default 512)."""
+    chunk = max(1, min(chunk, edge_budget))
+    while edge_budget % chunk:
+        chunk -= 1
+    return chunk
+
+
+def _chunk_messages(window, widx_ref, cidx_ref, ev_ref, mask_ref, sl,
+                    reduce: str, combine, weighted: bool):
+    """Gather + weight + mask one edge chunk from the VMEM-resident refs."""
+    widx = widx_ref[0, sl]
+    cidx = cidx_ref[0, sl]
+    msgs = jnp.take(window, widx, axis=0)  # confined random read (VMEM)
+    if weighted:
+        ev = ev_ref[0, sl][:, None]
+        msgs = combine(msgs, ev) if combine is not None else msgs * ev
+    mask = mask_ref[0, sl] > 0
+    ident = jnp.asarray(REDUCE_IDENTITY[reduce], msgs.dtype)
+    return jnp.where(mask[:, None], msgs, ident), cidx, mask
+
+
+def _fused_pull_kernel(
+    win_ref,    # (block_size, d)       the block's source-value window
+    widx_ref,   # (1, edge_budget)      src index within the window
+    cidx_ref,   # (1, edge_budget)      compacted dst local id (pad → 0)
+    ev_ref,     # (1, edge_budget)      edge values (ignored if unweighted)
+    mask_ref,   # (1, edge_budget)      1.0 on real edges, 0.0 on padding
+    idmap_ref,  # (1, local_budget)     local dst → global dst (pad → n)
+    eps_ref,    # (1, 2)                epilogue (mul, add)
+    out_ref,    # (tile_rows, d)        VMEM-resident output tile
+    *,
+    chunk: int,
+    reduce: str,
+    combine: Optional[Callable],
+    weighted: bool,
+    fuse_epilogue: bool,
+):
+    t = pl.program_id(0)
+    b = pl.program_id(1)
+    nb = pl.num_programs(1)
+    local_budget = idmap_ref.shape[1]
+    d = out_ref.shape[1]
+    tile_rows = out_ref.shape[0]
+    edge_budget = widx_ref.shape[1]
+    ident = REDUCE_IDENTITY[reduce]
+
+    @pl.when(b == 0)
+    def _init_tile():
+        out_ref[...] = jnp.full((tile_rows, d), ident, out_ref.dtype)
+
+    def body(c, acc):
+        sl = pl.dslice(c * chunk, chunk)
+        msgs, cidx, _ = _chunk_messages(
+            win_ref[...], widx_ref, cidx_ref, ev_ref, mask_ref, sl,
+            reduce, combine, weighted)
+        # padded slots carry the identity and (stored) cidx 0 — the exact
+        # operand stream of the slab path's flat segment reduce
+        if reduce == "sum":
+            return acc.at[cidx].add(msgs)
+        if reduce == "min":
+            return acc.at[cidx].min(msgs)
+        return acc.at[cidx].max(msgs)
+
+    acc = jnp.full((local_budget, d), ident, jnp.float32)
+    acc = jax.lax.fori_loop(0, edge_budget // chunk, body, acc, unroll=False)
+
+    # Fold the block's compacted partial straight into the resident tile.
+    gid = idmap_ref[0, :]
+    loc = gid - t * tile_rows
+    oob = (loc < 0) | (loc >= tile_rows)
+    loc = jnp.where(oob, tile_rows, loc)  # out-of-tile → dropped
+    tile = out_ref[...]
+    if reduce == "sum":
+        tile = tile.at[loc].add(acc, mode="drop")
+    elif reduce == "min":
+        tile = tile.at[loc].min(acc, mode="drop")
+    else:
+        tile = tile.at[loc].max(acc, mode="drop")
+    out_ref[...] = tile
+
+    if fuse_epilogue:
+        @pl.when(b == nb - 1)
+        def _epilogue():
+            out_ref[...] = out_ref[...] * eps_ref[0, 0] + eps_ref[0, 1]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "local_budget", "tile_rows", "num_tiles",
+                     "chunk", "reduce", "combine", "weighted",
+                     "fuse_epilogue", "interpret"),
+)
+def fused_pull_pallas(
+    values,       # f32[num_blocks*block_size, d]  (padded)
+    window_idx,   # i32[num_blocks, edge_budget]
+    compact_idx,  # i32[num_blocks, edge_budget]
+    edge_vals,    # f32[num_blocks, edge_budget]
+    edge_mask,    # f32[num_blocks, edge_budget]  (1.0 real / 0.0 pad)
+    id_map,       # i32[num_blocks, local_budget]  (pad = n → dropped)
+    epilogue,     # f32[1, 2]  (mul, add); identity when fuse_epilogue=False
+    *,
+    block_size: int,
+    local_budget: int,
+    tile_rows: int,
+    num_tiles: int = 1,
+    chunk: int = 512,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    weighted: bool = True,
+    fuse_epilogue: bool = False,
+    interpret: bool = True,
+):
+    """Fused pull: returns f32[num_tiles*tile_rows, d] — no partial slab.
+
+    A single tile sized to the padded output covers every graph in the
+    repo's suite; multi-tile runs trade VMEM for replaying each block's
+    edge stream once per tile."""
+    num_blocks, edge_budget = window_idx.shape
+    d = values.shape[1]
+    assert values.shape[0] == num_blocks * block_size, (
+        f"values must be padded to num_blocks*block_size, got {values.shape}")
+    chunk = _pick_chunk(edge_budget, chunk)
+    grid = (num_tiles, num_blocks)
+    kernel = functools.partial(
+        _fused_pull_kernel, chunk=chunk, reduce=reduce, combine=combine,
+        weighted=weighted, fuse_epilogue=fuse_epilogue)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_size, d), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, local_budget), lambda t, b: (b, 0)),
+            pl.BlockSpec((1, 2), lambda t, b: (0, 0)),
+        ],
+        # index map ignores b → the tile stays resident across the inner
+        # (cache block) grid dimension and is flushed once per tile
+        out_specs=pl.BlockSpec((tile_rows, d), lambda t, b: (t, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_tiles * tile_rows, d),
+                                       jnp.float32),
+        interpret=interpret,
+    )(values, window_idx, compact_idx, edge_vals, edge_mask, id_map,
+      epilogue)
+
+
+def _fused_push_kernel(
+    values_ref,  # (n_pad, d)            whole source vector, VMEM-resident
+    widx_ref,    # (1, edge_budget)      dst index within the block window
+    cidx_ref,    # (1, edge_budget)      compacted src local id
+    ev_ref,      # (1, edge_budget)
+    mask_ref,    # (1, edge_budget)
+    idmap_ref,   # (1, local_budget)     local src → global src (pad = n)
+    eps_ref,     # (1, 2)
+    out_ref,     # (block_size, d)       the block's disjoint dst window
+    *,
+    chunk: int,
+    reduce: str,
+    combine: Optional[Callable],
+    weighted: bool,
+    fuse_epilogue: bool,
+):
+    block_size = out_ref.shape[0]
+    edge_budget = widx_ref.shape[1]
+    ident = REDUCE_IDENTITY[reduce]
+
+    # in-VMEM block_contrib: each distinct source fetched once per block
+    contrib = jnp.take(values_ref[...], idmap_ref[0, :], axis=0)
+
+    def body(c, acc):
+        sl = pl.dslice(c * chunk, chunk)
+        cidx = cidx_ref[0, sl]
+        msgs = jnp.take(contrib, cidx, axis=0)
+        if weighted:
+            ev = ev_ref[0, sl][:, None]
+            msgs = combine(msgs, ev) if combine is not None else msgs * ev
+        mask = mask_ref[0, sl] > 0
+        msgs = jnp.where(mask[:, None], msgs,
+                         jnp.asarray(ident, msgs.dtype))
+        # padded edges → scratch row block_size (slab: segment n → dropped)
+        wid = jnp.where(mask, widx_ref[0, sl], block_size)
+        if reduce == "sum":
+            return acc.at[wid].add(msgs, mode="drop")
+        if reduce == "min":
+            return acc.at[wid].min(msgs, mode="drop")
+        return acc.at[wid].max(msgs, mode="drop")
+
+    d = out_ref.shape[1]
+    acc = jnp.full((block_size, d), ident, jnp.float32)
+    acc = jax.lax.fori_loop(0, edge_budget // chunk, body, acc, unroll=False)
+    if fuse_epilogue:
+        acc = acc * eps_ref[0, 0] + eps_ref[0, 1]
+    out_ref[...] = acc.astype(out_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "local_budget", "chunk", "reduce",
+                     "combine", "weighted", "fuse_epilogue", "interpret"),
+)
+def fused_push_pallas(
+    values,       # f32[n_pad, d]  (n_pad ≥ n+1 so padded id_map reads 0)
+    window_idx,   # i32[num_blocks, edge_budget]
+    compact_idx,  # i32[num_blocks, edge_budget]
+    edge_vals,    # f32[num_blocks, edge_budget]
+    edge_mask,    # f32[num_blocks, edge_budget]
+    id_map,       # i32[num_blocks, local_budget]
+    epilogue,     # f32[1, 2]
+    *,
+    block_size: int,
+    local_budget: int,
+    chunk: int = 512,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    weighted: bool = True,
+    fuse_epilogue: bool = False,
+    interpret: bool = True,
+):
+    """Fused push: returns f32[num_blocks*block_size, d] (slice to n).
+
+    The ``block_contrib`` slab of the slab engine is replaced by an
+    in-kernel gather from the resident ``values``."""
+    num_blocks, edge_budget = window_idx.shape
+    n_pad, d = values.shape
+    chunk = _pick_chunk(edge_budget, chunk)
+    kernel = functools.partial(
+        _fused_push_kernel, chunk=chunk, reduce=reduce, combine=combine,
+        weighted=weighted, fuse_epilogue=fuse_epilogue)
+    return pl.pallas_call(
+        kernel,
+        grid=(num_blocks,),
+        in_specs=[
+            # constant index map → fetched once, resident across all blocks
+            pl.BlockSpec((n_pad, d), lambda b: (0, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, edge_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, local_budget), lambda b: (b, 0)),
+            pl.BlockSpec((1, 2), lambda b: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_size, d), lambda b: (b, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_blocks * block_size, d),
+                                       jnp.float32),
+        interpret=interpret,
+    )(values, window_idx, compact_idx, edge_vals, edge_mask, id_map,
+      epilogue)

@@ -1,0 +1,186 @@
+"""Fused TOCAB reference path: scan over blocks, accumulate in the carry.
+
+This is the off-TPU backend of ``impl="fused"`` and the bit-identity anchor
+for the Pallas kernel.  The slab engines (``tocab_pull_partials`` →
+``reduce_partials``) materialize a ``(num_blocks, local_budget, *tail)``
+partial slab in HBM and pay a second full pass to merge it; here the output
+array *is* the accumulator — a ``lax.scan`` whose carry is the result folds
+each block's compacted partial straight in, so the only per-block
+intermediate is one ``(local_budget, *tail)`` buffer that XLA keeps in the
+loop body (registers/L1, never an HBM slab).
+
+Bit-identity with the slab path holds because both apply the same per-
+destination operand sequence in the same order: within a block, messages
+accumulate in edge-slot order (scatter/segment updates apply in operand
+order); across blocks, destinations accumulate in block-major order —
+exactly the order ``reduce_partials``'s flat segment reduce visits the slab.
+Padded edge slots contribute the identity to compact row 0 (pull) or are
+dropped (push), mirroring the slab engines slot for slot.
+"""
+from __future__ import annotations
+
+from typing import Callable, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.partition import REDUCE_IDENTITY, BlockedGraph
+
+__all__ = ["fused_pull_ref", "fused_push_ref", "fused_edge_reduce_ref"]
+
+_ACCUM = {
+    "sum": lambda out, ids, p: out.at[ids].add(p, mode="drop"),
+    "min": lambda out, ids, p: out.at[ids].min(p, mode="drop"),
+    "max": lambda out, ids, p: out.at[ids].max(p, mode="drop"),
+}
+
+
+def _apply_epilogue(out, epilogue):
+    if epilogue is None:
+        return out
+    mul, add = epilogue
+    return out * mul + add
+
+
+def _block_order(bg: BlockedGraph, order: Optional[Sequence[int]]):
+    if order is None:
+        return None
+    order = tuple(int(b) for b in order)
+    if sorted(order) != list(range(bg.num_blocks)):
+        raise ValueError(
+            f"block_order must be a permutation of range({bg.num_blocks})")
+    return order
+
+
+def _permuted(order, *arrays):
+    if order is None:
+        return arrays
+    idx = jnp.asarray(order, jnp.int32)
+    return tuple(None if a is None else jnp.take(a, idx, axis=0)
+                 for a in arrays)
+
+
+def fused_pull_ref(
+    bg: BlockedGraph,
+    values: jnp.ndarray,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    epilogue: Optional[Tuple] = None,
+    block_order: Optional[Sequence[int]] = None,
+):
+    """out[dst] = ⊕ per-block compacted partials, accumulated in place.
+
+    NB: a non-natural ``block_order`` changes the floating-point summation
+    order across blocks — bit-identity with the slab path needs the default
+    (natural) order.
+    """
+    assert bg.direction == "pull"
+    from repro.core.tocab import _edge_messages, segment_reduce
+
+    order = _block_order(bg, block_order)
+    widx, cidx, mask, idmap, lo, ev = _permuted(
+        order, bg.window_idx, bg.compact_idx, bg.edge_mask, bg.id_map,
+        bg.window_lo(), bg.edge_vals)
+    tail = values.shape[1:]
+    out0 = jnp.full((bg.n,) + tail, REDUCE_IDENTITY[reduce], values.dtype)
+    accum = _ACCUM[reduce]
+
+    def body(out, xs):
+        widx_b, cidx_b, mask_b, idmap_b, lo_b = xs[:5]
+        ev_b = xs[5] if len(xs) > 5 else None
+        msgs = _edge_messages(values, widx_b + lo_b, ev_b, mask_b, reduce,
+                              combine)
+        partial = segment_reduce(msgs, cidx_b, bg.local_budget, reduce)
+        # padded id_map rows point at n — out of range → dropped
+        return accum(out, idmap_b, partial), None
+
+    xs = (widx, cidx, mask, idmap, lo) + (() if ev is None else (ev,))
+    out, _ = jax.lax.scan(body, out0, xs)
+    return _apply_epilogue(out, epilogue)
+
+
+def fused_push_ref(
+    bg: BlockedGraph,
+    values: jnp.ndarray,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    epilogue: Optional[Tuple] = None,
+    block_order: Optional[Sequence[int]] = None,
+):
+    """Push: each block owns a disjoint destination window, so the scan
+    emits finished windows (stacked then deinterleaved) — the per-block
+    ``block_contrib`` gather stays inside the loop body instead of being a
+    ``(num_blocks, local_budget)`` HBM slab.  Windows are independent, so
+    any ``block_order`` (e.g. the bin-major one) is bit-identical."""
+    assert bg.direction == "push"
+    ident = REDUCE_IDENTITY[reduce]
+    order = _block_order(bg, block_order)
+    widx, cidx, mask, idmap, ev = _permuted(
+        order, bg.window_idx, bg.compact_idx, bg.edge_mask, bg.id_map,
+        bg.edge_vals)
+    tail = values.shape[1:]
+
+    def body(_, xs):
+        widx_b, cidx_b, mask_b, idmap_b = xs[:4]
+        ev_b = xs[4] if len(xs) > 4 else None
+        # the block's few distinct sources, fetched once (the reuse win)
+        contrib = jnp.take(values, idmap_b, axis=0, mode="fill", fill_value=0)
+        msgs = jnp.take(contrib, cidx_b, axis=0)
+        if ev_b is not None:
+            while ev_b.ndim < msgs.ndim:
+                ev_b = ev_b[..., None]
+        if combine is not None:
+            msgs = combine(msgs, ev_b)
+        elif ev_b is not None:
+            msgs = msgs * ev_b
+        mk = mask_b if msgs.ndim == mask_b.ndim else mask_b[..., None]
+        msgs = jnp.where(mk, msgs, jnp.asarray(ident, msgs.dtype))
+        # padded edges → row block_size → dropped (slab: segment n)
+        wid = jnp.where(mask_b, widx_b, bg.block_size)
+        from repro.core.tocab import segment_reduce
+
+        win = segment_reduce(msgs, wid, bg.block_size + 1, reduce)
+        return None, win[: bg.block_size]
+
+    xs = (widx, cidx, mask, idmap) + (() if ev is None else (ev,))
+    _, wins = jax.lax.scan(body, None, xs)  # (nb, block_size) + tail
+    if order is not None:
+        inv = [0] * bg.num_blocks
+        for j, b in enumerate(order):
+            inv[b] = j
+        wins = jnp.take(wins, jnp.asarray(inv, jnp.int32), axis=0)
+    out = wins.reshape((bg.num_blocks * bg.block_size,) + tail)[: bg.n]
+    return _apply_epilogue(out, epilogue)
+
+
+def fused_edge_reduce_ref(
+    bg: BlockedGraph,
+    flat_edge_vals: jnp.ndarray,
+    reduce: str = "sum",
+    epilogue: Optional[Tuple] = None,
+):
+    """Edge values → compacted-side aggregate without the partial slab.
+
+    The ``(num_blocks, edge_budget)`` blocked edge-value slab is the
+    *input* layout (unavoidable); what the fused path removes is the
+    ``(num_blocks, local_budget)`` partial intermediate."""
+    from repro.core.tocab import blocked_edge_values, segment_reduce
+
+    vals = blocked_edge_values(bg, flat_edge_vals)
+    ident = jnp.asarray(REDUCE_IDENTITY[reduce], vals.dtype)
+    tail = vals.shape[2:]
+    out0 = jnp.full((bg.n,) + tail, ident, vals.dtype)
+    accum = _ACCUM[reduce]
+
+    def body(out, xs):
+        vals_b, cidx_b, mask_b, idmap_b = xs
+        mk = mask_b
+        while mk.ndim < vals_b.ndim:
+            mk = mk[..., None]
+        masked = jnp.where(mk, vals_b, ident)
+        partial = segment_reduce(masked, cidx_b, bg.local_budget, reduce)
+        return accum(out, idmap_b, partial), None
+
+    out, _ = jax.lax.scan(
+        body, out0, (vals, bg.compact_idx, bg.edge_mask, bg.id_map))
+    return _apply_epilogue(out, epilogue)

@@ -43,12 +43,19 @@ def _kernel(
     d = out_ref.shape[2]
     edge_budget = widx_ref.shape[1]
     acc = jnp.zeros((local_budget, d), jnp.float32)
+    num_chunks = -(-edge_budget // chunk)
 
     def body(c, acc):
-        sl = pl.dslice(c * chunk, chunk)
+        # Final ragged chunk: clamp the start so the slice stays in bounds,
+        # then zero the slots the previous chunk already covered (sum-only
+        # kernel, edge values carry the mask — a 0 contribution is a no-op).
+        start = jnp.minimum(c * chunk, edge_budget - chunk)
+        sl = pl.dslice(start, chunk)
         widx = widx_ref[0, sl]
         cidx = cidx_ref[0, sl]
         ev = evals_ref[0, sl]
+        fresh = start + jax.lax.iota(jnp.int32, chunk) >= c * chunk
+        ev = jnp.where(fresh, ev, 0.0)
         # gather from the VMEM-resident window (the confined random read)
         msgs = jnp.take(window_ref[...], widx, axis=0) * ev[:, None]
         if mode == "onehot":
@@ -63,7 +70,7 @@ def _kernel(
             acc = acc.at[cidx].add(msgs)
         return acc
 
-    acc = jax.lax.fori_loop(0, edge_budget // chunk, body, acc, unroll=False)
+    acc = jax.lax.fori_loop(0, num_chunks, body, acc, unroll=False)
     out_ref[0, :, :] = acc.astype(out_ref.dtype)
 
 
@@ -89,7 +96,8 @@ def tocab_spmm_pallas(
     assert values.shape[0] == num_blocks * block_size, (
         f"values must be padded to num_blocks*block_size, got {values.shape}"
     )
-    assert edge_budget % chunk == 0, (edge_budget, chunk)
+    # ragged edge budgets are fine — the kernel masks the final chunk
+    chunk = min(chunk, edge_budget)
 
     grid = (num_blocks,)
     return pl.pallas_call(

@@ -86,10 +86,8 @@ def tocab_spmm_partials(
             values.reshape(bg.num_blocks, bg.block_size, d_pad), ids, axis=0
         ).reshape(len(block_ids) * bg.block_size, d_pad)
 
+    # ragged edge budgets are handled in-kernel (final chunk is masked)
     chunk = max(1, min(chunk, bg.edge_budget))
-    # edge_budget is padded to 128; make it divisible by chunk
-    while bg.edge_budget % chunk:
-        chunk //= 2
 
     fn = tocab_spmm_ref if use_ref else partial(
         tocab_spmm_pallas, chunk=chunk, mode=mode, interpret=interpret

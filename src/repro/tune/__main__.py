@@ -91,12 +91,22 @@ def cmd_tune(args) -> int:
     graphs = _load_graphs(args.graphs, budget)
     workloads = tuple(args.workloads) if args.workloads else (
         ("pagerank",) if budget == "smoke" else ("pagerank", "spmv"))
+    space = None
+    if args.impls:
+        import dataclasses
+
+        from .space import SearchSpace
+
+        space = dataclasses.replace(
+            SearchSpace.for_budget(budget, cfg), impls=tuple(args.impls))
     print(f"# tuning {sorted(graphs)} x {list(workloads)} "
-          f"(budget={budget}, db={tune_db.db_path(args.db_dir)})",
+          f"(budget={budget}, dtype={args.dtype}, "
+          f"db={tune_db.db_path(args.db_dir)})",
           file=sys.stderr)
     summary = tuner.tune(
-        graphs, workloads=workloads, budget=budget, db_dir=args.db_dir,
-        cfg=cfg, force=args.force, verbose=args.verbose)
+        graphs, workloads=workloads, budget=budget, space=space,
+        db_dir=args.db_dir, cfg=cfg, force=args.force, verbose=args.verbose,
+        dtype=args.dtype)
     for e in summary["entries"]:
         src = "db-hit" if e.get("db_hit") else (
             f"{len(e['trials'])} trials, {e['pruned_analytic']} pruned")
@@ -164,7 +174,9 @@ def cmd_apply(args) -> int:
             print(f"out = {'tocab' if c['engine'] == 'tocab' else 'cb'}_"
                   f"{c['direction']}(bg, x"
                   + (f", schedule={c['schedule']!r}"
-                     if c["engine"] == "tocab" else "") + ")")
+                     if c["engine"] == "tocab" else "")
+                  + (f", impl={c['impl']!r}"
+                     if c.get("impl", "slab") != "slab" else "") + ")")
         else:
             print(f"out = baseline_{c['direction']}(dg, x)")
         if e["workload"] == "bfs":
@@ -197,6 +209,15 @@ def main(argv: Optional[list] = None) -> int:
     t.add_argument("--workloads", default=None,
                    type=lambda s: [x for x in s.split(",") if x],
                    choices=None, metavar=f"{{{','.join(WORKLOADS)}}}")
+    t.add_argument("--impls", default=None,
+                   type=lambda s: [x for x in s.split(",") if x],
+                   metavar="{slab,fused}",
+                   help="restrict the engine-impl axis (default: the "
+                        "arch config's tune_impls)")
+    t.add_argument("--dtype", default="float32",
+                   choices=("float32", "bfloat16"),
+                   help="value dtype the trials time and the DB entry is "
+                        "keyed on")
     t.add_argument("--force", action="store_true",
                    help="re-tune even on a DB hit")
     t.add_argument("--verbose", action="store_true")
@@ -216,6 +237,10 @@ def main(argv: Optional[list] = None) -> int:
         bad = sorted(set(args.workloads) - set(WORKLOADS))
         if bad:
             ap.error(f"unknown workload(s) {bad}; expected {WORKLOADS}")
+    if args.cmd == "tune" and args.impls:
+        bad = sorted(set(args.impls) - {"slab", "fused"})
+        if bad:
+            ap.error(f"unknown impl(s) {bad}; expected slab/fused")
     return args.fn(args)
 
 

@@ -29,6 +29,23 @@ MODEL_CFG = CacheConfig(capacity_bytes=64 * 1024, line_bytes=128, ways=16)
 # tocab-push shares tocab's blocked one)
 _MODEL_VARIANT = {"base": "base", "cb": "cb", "tocab": "tocab"}
 
+
+def _variant_of(candidate: Candidate) -> str:
+    """tocab × impl='fused' replays the no-partial-slab stream; everything
+    else keys on engine alone."""
+    if candidate.engine == "tocab" and candidate.impl == "fused":
+        return "fused"
+    return _MODEL_VARIANT[candidate.engine]
+
+
+def _group_of(candidate: Candidate) -> tuple:
+    """Stream-equivalence group: schedule/dense-impl/α don't change the
+    access stream, but the fused impl does."""
+    if not candidate.blocked:
+        return (candidate.engine, "slab", 0)
+    impl = candidate.impl if candidate.engine == "tocab" else "slab"
+    return (candidate.engine, impl, candidate.block_size)
+
 # (graph_fp, variant, block_size, cfg) -> replay result dict.  The LRU
 # replay is a host-side Python loop over every edge — worth memoizing hard.
 _MEMO: dict = {}
@@ -37,7 +54,7 @@ _MEMO: dict = {}
 def predicted_cost(g: Graph, candidate: Candidate,
                    cfg: CacheConfig = MODEL_CFG) -> dict:
     """Cache-model replay for ``candidate``'s stream group (memoized)."""
-    variant = _MODEL_VARIANT[candidate.engine]
+    variant = _variant_of(candidate)
     block = candidate.block_size if candidate.blocked else 0
     key = (graph_fingerprint(g), variant, block, cfg)
     if key not in _MEMO:
@@ -64,23 +81,22 @@ def prune(g: Graph, candidates: Iterable[Candidate],
         return [], []
     scores = {}
     for c in candidates:
-        group = (c.engine, c.block_size if c.blocked else 0)
+        group = _group_of(c)
         if group not in scores:
             scores[group] = predicted_cost(g, c, cfg)["dram_per_edge"]
     best = min(scores.values())
     cut = best * max(prune_ratio, 1.0)
     kept, pruned = [], []
     for c in candidates:
-        group = (c.engine, c.block_size if c.blocked else 0)
-        (kept if scores[group] <= cut else pruned).append(c)
+        (kept if scores[_group_of(c)] <= cut else pruned).append(c)
     labels = dict(workload=workload)
     if graph_name:
         labels["graph"] = graph_name
-    for (engine, block), s in sorted(scores.items()):
+    for (engine, impl, block), s in sorted(scores.items()):
         _obs.gauge(
             "tune.analytic_dram_per_edge",
             "cache-model prediction per candidate stream group",
-        ).set(s, engine=engine, block_size=block, **labels)
+        ).set(s, engine=engine, impl=impl, block_size=block, **labels)
     _obs.counter("tune.candidates_pruned",
                  "candidates dropped by the analytic pre-pass").inc(
         len(pruned), **labels)

@@ -19,8 +19,8 @@ from repro.obs.metrics import registry as _obs
 from . import db
 from .space import WORKLOADS, Candidate
 
-__all__ = ["TunedPlan", "resolve_plan", "resolve_schedule", "resolve_alpha",
-           "blocked_for", "clear_cache"]
+__all__ = ["TunedPlan", "resolve_plan", "resolve_schedule", "resolve_impl",
+           "resolve_alpha", "blocked_for", "clear_cache"]
 
 DEFAULT_ALPHA = 15.0
 
@@ -46,6 +46,10 @@ class TunedPlan:
     @property
     def alpha(self) -> float:
         return self.candidate.alpha
+
+    @property
+    def impl(self) -> str:
+        return self.candidate.impl
 
 
 def _fingerprint_of(obj) -> Optional[str]:
@@ -113,6 +117,17 @@ def resolve_schedule(obj, workload: str = "pagerank",
     if plan is None or not plan.candidate.blocked:
         return "uniform"
     return plan.candidate.schedule
+
+
+def resolve_impl(obj, workload: str = "pagerank", dtype: str = "float32",
+                 db_dir: Optional[str] = None) -> str:
+    """Concrete ``impl`` for ``impl="auto"``: the plan's slab/fused pick for
+    a blocked winner, else ``slab``.  Entries written before the impl axis
+    existed deserialize with the ``slab`` default, so old DBs stay valid."""
+    plan = resolve_plan(obj, workload=workload, dtype=dtype, db_dir=db_dir)
+    if plan is None or not plan.candidate.blocked:
+        return "slab"
+    return plan.candidate.impl
 
 
 def resolve_alpha(obj, workload: str = "bfs", dtype: str = "float32",

@@ -92,26 +92,32 @@ def _pr_variant(candidate: Candidate) -> str:
     return "gc-pull" if candidate.direction == "pull" else "gc-push"
 
 
-def _workload_fn(workload: str, g: Graph, dg, bg, candidate: Candidate):
-    """Jitted callable + args for one (workload, candidate) pairing."""
+def _workload_fn(workload: str, g: Graph, dg, bg, candidate: Candidate,
+                 dtype: str = "float32"):
+    """Jitted callable + args for one (workload, candidate, dtype) pairing.
+
+    ``dtype`` is the value dtype the trial times (the DB entry's key dtype)
+    — a bfloat16-keyed entry must be tuned on bfloat16 streams, not assume
+    float32."""
+    vdtype = jnp.dtype(dtype)
     if workload == "pagerank":
-        rank = jnp.full((g.n,), 1.0 / g.n, jnp.float32)
+        rank = jnp.full((g.n,), 1.0 / g.n, vdtype)
         variant = _pr_variant(candidate)
         fn = jax.jit(lambda r: pagerank_iteration(
             variant, dg, bg, r, dg.out_degree,
-            schedule=candidate.schedule))
+            schedule=candidate.schedule, impl=candidate.impl))
         return fn, (rank,)
     if workload == "spmv":
-        x = jnp.ones((g.n,), jnp.float32)
+        x = jnp.ones((g.n,), vdtype)
         variant = _pr_variant(candidate)
         fn = jax.jit(lambda xx: _spmv_fn(
             dg, bg, xx, variant=variant, schedule=candidate.schedule,
-            dense_impl=candidate.dense_impl))
+            dense_impl=candidate.dense_impl, impl=candidate.impl))
         return fn, (x,)
     if workload == "bfs":
         fn = jax.jit(lambda s: _traversal.bfs(
             dg, bg, s, alpha=candidate.alpha,
-            schedule=candidate.schedule))
+            schedule=candidate.schedule, impl=candidate.impl))
         return fn, (jnp.int32(0),)
     raise ValueError(f"unknown workload {workload!r}")
 
@@ -133,7 +139,8 @@ def time_fn(fn, args: Tuple, warmup: int, reps: int, **span_attrs) -> float:
 def run_trial(g: Graph, candidate: Candidate, workload: str = "pagerank",
               budget: Optional[TrialBudget] = None,
               graph_name: Optional[str] = None,
-              warmup: int = 1, reps: int = 3) -> Trial:
+              warmup: int = 1, reps: int = 3,
+              dtype: str = "float32") -> Trial:
     """Build, time, and record one candidate.
 
     Engines with unusable combinations surface as exceptions — the sweep
@@ -141,7 +148,7 @@ def run_trial(g: Graph, candidate: Candidate, workload: str = "pagerank",
     if budget is not None:
         warmup, reps = budget.warmup, budget.reps
     dg, bg = build_for(g, candidate)
-    fn, args = _workload_fn(workload, g, dg, bg, candidate)
+    fn, args = _workload_fn(workload, g, dg, bg, candidate, dtype)
     us = time_fn(fn, args, warmup, reps,
                  workload=workload, candidate=candidate.key(),
                  graph=graph_name or graph_fingerprint(g))

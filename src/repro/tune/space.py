@@ -47,6 +47,7 @@ class Candidate:
     direction: str = "pull"  # pull | push
     schedule: str = "uniform"  # uniform | balanced
     dense_impl: Optional[str] = None  # pallas | onehot | None (backend pick)
+    impl: str = "slab"  # slab | fused (tocab engines only)
     block_size: int = 2048
     bin_thresholds: Thresholds = DEFAULT_BIN_THRESHOLDS
     alpha: float = 15.0  # Beamer direction-switch constant (traversal)
@@ -60,6 +61,8 @@ class Candidate:
         parts = [self.engine]
         if self.blocked:
             parts += [self.direction, f"b{self.block_size}", self.schedule]
+            if self.impl != "slab":
+                parts.append(self.impl)
             if self.schedule == "balanced":
                 parts.append(self.dense_impl or "autoimpl")
                 th = self.bin_thresholds
@@ -124,6 +127,7 @@ class SearchSpace:
     directions: Tuple[str, ...] = ("pull", "push")
     schedules: Tuple[str, ...] = ("uniform", "balanced")
     dense_impls: Tuple[Optional[str], ...] = (None,)
+    impls: Tuple[str, ...] = ("slab", "fused")
     block_sizes: Tuple[int, ...] = (1024, 2048, 8192)
     bin_thresholds: Tuple[Thresholds, ...] = (DEFAULT_BIN_THRESHOLDS,)
     alphas: Tuple[float, ...] = (15.0,)
@@ -155,9 +159,14 @@ class SearchSpace:
                 scheds = ("uniform",) if engine == "cb" else self.schedules
                 for sched in scheds:
                     if sched != "balanced":
-                        out.append(Candidate(
-                            engine=engine, direction=direction,
-                            schedule=sched, block_size=bs, alpha=alpha))
+                        # fused is a TOCAB-only uniform-schedule variant
+                        impls = self.impls if engine == "tocab" \
+                            else ("slab",)
+                        for impl in impls:
+                            out.append(Candidate(
+                                engine=engine, direction=direction,
+                                schedule=sched, impl=impl, block_size=bs,
+                                alpha=alpha))
                         continue
                     for impl, th in itertools.product(
                             self.dense_impls, self.bin_thresholds):
@@ -184,16 +193,18 @@ class SearchSpace:
         blocks = set(getattr(cfg, "tune_block_sizes",
                              (1024, 2048, 4096, 8192, 16384))) | {block}
         alphas = set(getattr(cfg, "tune_alphas", (4.0, 64.0))) | {alpha}
+        impls = tuple(getattr(cfg, "tune_impls", ("slab", "fused")))
         if budget == "smoke":
             return cls(engines=("base", "tocab"), directions=("pull",),
-                       block_sizes=(2048,), alphas=(alpha,))
+                       block_sizes=(2048,), impls=impls, alphas=(alpha,))
         if budget == "small":
             return cls(block_sizes=tuple(sorted({1024, 2048, block})),
-                       alphas=tuple(sorted(alphas)))
+                       impls=impls, alphas=tuple(sorted(alphas)))
         if budget == "full":
             return cls(
                 block_sizes=tuple(sorted(blocks | {512})),
                 dense_impls=(None, "onehot", "pallas"),
+                impls=impls,
                 bin_thresholds=(DEFAULT_BIN_THRESHOLDS, "auto"),
                 alphas=tuple(sorted(alphas | {2.0})))
         raise ValueError(

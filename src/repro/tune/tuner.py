@@ -36,7 +36,8 @@ def _record_chosen(entry: dict, graph_name: str):
         "tune.chosen", "chosen tuner config (value = median µs)",
     ).set(entry["best_us"], graph=graph_name, workload=entry["workload"],
           engine=c["engine"], direction=c["direction"],
-          schedule=c["schedule"], block_size=c["block_size"])
+          schedule=c["schedule"], impl=c.get("impl", "slab"),
+          block_size=c["block_size"])
     _obs.gauge("tune.chosen_block_size", "tuned TOCAB block size").set(
         c["block_size"], graph=graph_name, workload=entry["workload"])
     _obs.gauge("tune.non_default", "1 when tuning beat the hard-coded "
@@ -81,7 +82,7 @@ def tune_graph(
         try:
             trials.append(runner.run_trial(
                 g, c, workload=workload, budget=budget,
-                graph_name=graph_name))
+                graph_name=graph_name, dtype=dtype))
             if verbose:
                 print(f"#   trial {graph_name}/{workload} {c.key()}: "
                       f"{trials[-1].us:.0f}us", file=sys.stderr)
@@ -126,10 +127,12 @@ def tune(
     cfg=None,
     force: bool = False,
     verbose: bool = False,
+    dtype: str = "float32",
 ) -> dict:
     """Sweep a graph suite; returns a summary dict:
 
-    ``{"entries": [...], "new_trials": N, "pruned": N, "db_hits": N}``."""
+    ``{"entries": [...], "new_trials": N, "pruned": N, "db_hits": N}``.
+    ``dtype`` keys the DB entries *and* the value arrays the trials time."""
     tb = BUDGETS[budget] if isinstance(budget, str) else budget
     space = space or SearchSpace.for_budget(tb.name, cfg)
     default = default_candidate(getattr(cfg, "block_size", 2048))
@@ -139,7 +142,7 @@ def tune(
             entry = tune_graph(
                 g, gname, workload=wl, space=space, budget=tb,
                 db_dir=db_dir, force=force, default=default,
-                verbose=verbose)
+                verbose=verbose, dtype=dtype)
             entries.append(entry)
             if entry.get("db_hit"):
                 db_hits += 1
