@@ -49,7 +49,13 @@ def main() -> None:
                     help="directory for BENCH_<fig>.json artifacts")
     ap.add_argument("--list", action="store_true",
                     help="list benchmark fn names and exit")
+    ap.add_argument("--chaos", default=None, metavar="SEED:RATE",
+                    help="arm deterministic fault injection at the default "
+                         "sites (repro.resilience.chaos) for the whole run")
     args = ap.parse_args()
+    if args.chaos:
+        from repro.resilience import chaos
+        chaos.configure_spec(args.chaos)
     from . import paper_figs
     if args.list:
         for fn in paper_figs.ALL:

@@ -7,6 +7,7 @@ cache-model parameters of the GTX 1080Ti the paper measured on.
 from __future__ import annotations
 
 import dataclasses
+from typing import Optional
 
 
 @dataclasses.dataclass(frozen=True)
@@ -31,6 +32,13 @@ class GraphCageCfg:
     tune_alphas: tuple = (4.0, 15.0, 64.0)
     tune_impls: tuple = ("slab", "fused")
     tune_db_dir: str = "experiments/tune"
+    # resilience (repro.resilience) — retry budget for IO paths, the
+    # per-candidate tuner wall-clock bound (None = unbounded), and whether
+    # explicitly-requested impls may degrade down the engine ladder
+    retry_attempts: int = 3
+    retry_base_delay: float = 0.05
+    trial_timeout_s: Optional[float] = None
+    allow_engine_fallback: Optional[bool] = None  # None → env/impl-derived
 
 
 DEFAULT = GraphCageCfg()

@@ -397,16 +397,36 @@ def bin_pull_partials(
     rb = _compact_budget(sched, bin_id, bg.local_budget)
     if bin_id == BIN_DENSE and _dense_eligible(reduce, combine):
         impl = dense_impl or default_dense_impl()
-        if impl == "pallas":
-            from repro.kernels.tocab_spmm.ops import tocab_spmm_partials
 
-            if interpret is None:
-                interpret = jax.default_backend() != "tpu"
-            return tocab_spmm_partials(
-                bg, values, block_ids=ids, local_budget=rb,
-                unweighted=combine is UNWEIGHTED, interpret=interpret)
-        cidx, mask, msgs = _pull_msgs(bg, ids, values, reduce, combine)
-        return _reduce_msgs_onehot(rb, cidx, mask, msgs)
+        def _onehot():
+            cidx, mask, msgs = _pull_msgs(bg, ids, values, reduce, combine)
+            return _reduce_msgs_onehot(rb, cidx, mask, msgs)
+
+        if impl == "pallas":
+            from repro.resilience import chaos, degrade
+
+            def _pallas():
+                chaos.maybe_raise("kernel.tocab_spmm")
+                from repro.kernels.tocab_spmm.ops import tocab_spmm_partials
+
+                itp = (interpret if interpret is not None
+                       else jax.default_backend() != "tpu")
+                return tocab_spmm_partials(
+                    bg, values, block_ids=ids, local_budget=rb,
+                    unweighted=combine is UNWEIGHTED, interpret=itp)
+
+            # backend-picked pallas (dense_impl=None) may degrade to the
+            # one-hot matmul; an explicitly requested pallas only under
+            # REPRO_RESILIENCE_FALLBACK
+            allow = degrade.fallback_allowed(
+                "auto" if dense_impl is None else dense_impl, None)
+            if allow:
+                return degrade.dispatch(
+                    "tocab_spmm", bg.fingerprint,
+                    [("pallas", _pallas), ("onehot", _onehot)],
+                    allow_fallback=True)
+            return _pallas()
+        return _onehot()
     cidx, mask, msgs = _pull_msgs(bg, ids, values, reduce, combine)
     if bin_id == BIN_SPARSE:
         return _reduce_msgs_sparse(rb, cidx, mask, msgs, reduce)

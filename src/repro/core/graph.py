@@ -19,7 +19,9 @@ import numpy as np
 __all__ = [
     "Graph",
     "DeviceGraph",
+    "GraphValidationError",
     "from_edges",
+    "validate_graph",
     "graph_fingerprint",
     "rmat_graph",
     "uniform_random_graph",
@@ -29,6 +31,79 @@ __all__ = [
 
 #: cap on how many colidx entries the fingerprint hashes (strided sample)
 _FP_SAMPLE = 4096
+
+#: cap on how many colidx entries level="cheap" bounds-checks (strided sample)
+_VALIDATE_SAMPLE = 65536
+
+_INT32_MAX = np.iinfo(np.int32).max
+
+
+class GraphValidationError(ValueError):
+    """A CSR structural invariant does not hold.
+
+    ``check`` names the violated invariant (stable identifier, e.g.
+    ``"rowptr_monotone"``), ``detail`` is a human-readable description.
+    Structured so callers (tests, ingestion pipelines) can branch on the
+    failure class without parsing messages."""
+
+    def __init__(self, check: str, detail: str):
+        super().__init__(f"{check}: {detail}")
+        self.check = check
+        self.detail = detail
+
+
+def validate_graph(g: "Graph", level: str = "cheap") -> "Graph":
+    """Check CSR invariants, raising :class:`GraphValidationError`.
+
+    ``level="cheap"`` is O(n) + an O(sample) colidx bounds check: rowptr
+    shape/endpoints/monotonicity, strided colidx sample in ``[0, n)``,
+    edge-value length, and int32 addressability (the device engines index
+    with int32).  ``level="full"`` additionally bounds-checks every colidx
+    entry.  Returns ``g`` unchanged on success so calls can be chained."""
+    if level not in ("cheap", "full"):
+        raise ValueError(f"unknown validation level {level!r}")
+    n, rowptr, colidx = g.n, np.asarray(g.rowptr), np.asarray(g.colidx)
+    m = int(colidx.shape[0])
+    if n < 0:
+        raise GraphValidationError("n_negative", f"n={n} < 0")
+    if n > _INT32_MAX or m > _INT32_MAX:
+        raise GraphValidationError(
+            "budget_overflow",
+            f"n={n}, m={m} exceed int32 addressing used by device engines")
+    if rowptr.ndim != 1 or rowptr.shape[0] != n + 1:
+        raise GraphValidationError(
+            "rowptr_shape",
+            f"rowptr has shape {rowptr.shape}, expected ({n + 1},)")
+    if m and not np.issubdtype(rowptr.dtype, np.integer):
+        raise GraphValidationError(
+            "rowptr_dtype", f"rowptr dtype {rowptr.dtype} is not integral")
+    if int(rowptr[0]) != 0:
+        raise GraphValidationError(
+            "rowptr_origin", f"rowptr[0]={int(rowptr[0])}, expected 0")
+    if int(rowptr[-1]) != m:
+        raise GraphValidationError(
+            "rowptr_total",
+            f"rowptr[-1]={int(rowptr[-1])} != m={m} (len(colidx))")
+    if n and np.any(np.diff(rowptr) < 0):
+        bad = int(np.argmax(np.diff(rowptr) < 0))
+        raise GraphValidationError(
+            "rowptr_monotone",
+            f"rowptr decreases at row {bad} "
+            f"({int(rowptr[bad])} -> {int(rowptr[bad + 1])})")
+    if g.vals is not None and np.asarray(g.vals).shape[0] != m:
+        raise GraphValidationError(
+            "vals_length",
+            f"vals has {np.asarray(g.vals).shape[0]} entries, expected m={m}")
+    if m:
+        sample = colidx
+        if level == "cheap" and m > _VALIDATE_SAMPLE:
+            sample = colidx[:: max(1, m // _VALIDATE_SAMPLE)]
+        lo, hi = int(sample.min()), int(sample.max())
+        if lo < 0 or hi >= n:
+            raise GraphValidationError(
+                "colidx_range",
+                f"colidx entries span [{lo}, {hi}], expected [0, {n})")
+    return g
 
 
 def _fingerprint_arrays(n: int, m: int, out_degree, colidx) -> str:
@@ -106,6 +181,10 @@ class Graph:
         hist[f"{lo}~"] = float(np.mean(deg >= lo))
         return hist
 
+    def validate(self, level: str = "cheap") -> "Graph":
+        """Check CSR invariants (see :func:`validate_graph`)."""
+        return validate_graph(self, level=level)
+
 
 @jax.tree_util.register_dataclass
 @dataclasses.dataclass(frozen=True)
@@ -148,10 +227,25 @@ def from_edges(
     dst: np.ndarray,
     vals: Optional[np.ndarray] = None,
     dedup: bool = False,
+    validate: Optional[str] = None,
 ) -> Graph:
-    """Build a CSR :class:`Graph` from COO edges."""
+    """Build a CSR :class:`Graph` from COO edges.
+
+    ``validate="cheap"`` / ``"full"`` runs :func:`validate_graph` on the
+    result (and raises :class:`GraphValidationError` on malformed COO input
+    instead of an assertion)."""
     src = np.asarray(src, dtype=np.int64)
     dst = np.asarray(dst, dtype=np.int64)
+    if src.shape != dst.shape:
+        raise GraphValidationError(
+            "coo_shape", f"src shape {src.shape} != dst shape {dst.shape}")
+    if src.size and validate is not None:
+        lo = min(int(src.min()), int(dst.min()))
+        hi = max(int(src.max()), int(dst.max()))
+        if lo < 0 or hi >= n:
+            raise GraphValidationError(
+                "coo_range",
+                f"edge endpoints span [{lo}, {hi}], expected [0, {n})")
     if src.size:
         assert src.min() >= 0 and src.max() < n, "src out of range"
         assert dst.min() >= 0 and dst.max() < n, "dst out of range"
@@ -167,7 +261,8 @@ def from_edges(
     rowptr = np.zeros(n + 1, dtype=np.int64)
     np.add.at(rowptr, src + 1, 1)
     rowptr = np.cumsum(rowptr)
-    return Graph(n=n, rowptr=rowptr, colidx=dst.astype(np.int32), vals=vals)
+    g = Graph(n=n, rowptr=rowptr, colidx=dst.astype(np.int32), vals=vals)
+    return g if validate is None else validate_graph(g, level=validate)
 
 
 def rmat_graph(

@@ -27,7 +27,7 @@ PR_VARIANTS = ("base", "push", "cb", "gc-pull", "gc-push")
 
 
 def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform",
-                 impl="slab", epilogue=None):
+                 impl="slab", epilogue=None, allow_fallback=None):
     # PR is unweighted: the UNWEIGHTED sentinel combine ignores any edge
     # values the graph carries (and keeps the dense tile path eligible).
     kw = dict(reduce="sum", combine=_unweighted)
@@ -39,10 +39,12 @@ def _gather_sums(variant: str, dg, bg, contributions, schedule="uniform",
         return tocab.cb_pull(bg, contributions, **kw)
     if variant == "gc-pull":
         return tocab.tocab_pull(bg, contributions, schedule=schedule,
-                                impl=impl, epilogue=epilogue, **kw)
+                                impl=impl, epilogue=epilogue,
+                                allow_fallback=allow_fallback, **kw)
     if variant == "gc-push":
         return tocab.tocab_push(bg, contributions, schedule=schedule,
-                                impl=impl, epilogue=epilogue, **kw)
+                                impl=impl, epilogue=epilogue,
+                                allow_fallback=allow_fallback, **kw)
     raise ValueError(f"unknown PR variant {variant!r}")
 
 
@@ -56,6 +58,7 @@ def pagerank_iteration(
     handle_dangling: bool = True,
     schedule: str = "uniform",
     impl: str = "slab",
+    allow_fallback=None,
 ):
     """One PR iteration: contributions → gather/scatter → apply.
 
@@ -73,7 +76,8 @@ def pagerank_iteration(
     if variant in ("gc-pull", "gc-push"):
         add = (1.0 - damping) / n + damping * (dangling / n)
         return _gather_sums(variant, dg, bg, contributions, schedule,
-                            impl, epilogue=(damping, add))
+                            impl, epilogue=(damping, add),
+                            allow_fallback=allow_fallback)
     sums = _gather_sums(variant, dg, bg, contributions, schedule)
     return (1.0 - damping) / n + damping * (sums + dangling / n)
 
@@ -88,6 +92,7 @@ def pagerank(
     handle_dangling: bool = True,
     schedule: str = "uniform",
     impl: str = "slab",
+    allow_fallback=None,
 ):
     """Iterate PR until the L1 delta falls below ``tol``.
 
@@ -95,20 +100,31 @@ def pagerank(
     consult the tuning DB (``repro.tune``) via the graph's build-time
     fingerprint; resolution happens here, outside jit, so the jit cache is
     keyed on the concrete choices and a re-tune takes effect on the next
-    call."""
+    call.  ``impl="auto"`` (or ``allow_fallback=True``) also arms the
+    fused→slab→reference degradation ladder: a kernel-dispatch failure at
+    trace time degrades the engine instead of crashing the run, and the
+    memoized verdict (``repro.resilience.degrade``) pins later calls for
+    this graph straight to the working rung."""
+    from repro.resilience import degrade
+
     obj = bg if bg is not None else dg
     rs = tocab.resolve_schedule(obj, schedule, workload="pagerank")
     ri = tocab.resolve_impl(obj, impl, workload="pagerank")
     rs, ri = tocab._reconcile_fused(rs, ri, schedule, impl)
+    allow = degrade.fallback_allowed(impl, allow_fallback)
+    if allow and bg is not None and variant in ("gc-pull", "gc-push"):
+        site = "tocab_pull" if variant == "gc-pull" else "tocab_push"
+        ri = degrade.apply_verdict(bg.fingerprint, site, ri)
     return _pagerank_jit(
-        dg, bg, variant, damping, tol, max_iters, handle_dangling, rs, ri)
+        dg, bg, variant, damping, tol, max_iters, handle_dangling, rs, ri,
+        allow)
 
 
 @partial(
     jax.jit,
     static_argnames=(
         "variant", "damping", "tol", "max_iters", "handle_dangling",
-        "schedule", "impl",
+        "schedule", "impl", "allow_fallback",
     ),
 )
 def _pagerank_jit(
@@ -121,6 +137,7 @@ def _pagerank_jit(
     handle_dangling: bool,
     schedule: str,
     impl: str = "slab",
+    allow_fallback: bool = False,
 ):
     n = dg.n
     rank0 = jnp.full((n,), 1.0 / n, jnp.float32)
@@ -133,7 +150,7 @@ def _pagerank_jit(
         rank, _, it = state
         new_rank = pagerank_iteration(
             variant, dg, bg, rank, dg.out_degree, damping, handle_dangling,
-            schedule, impl,
+            schedule, impl, allow_fallback,
         )
         return new_rank, jnp.abs(new_rank - rank).sum(), it + 1
 

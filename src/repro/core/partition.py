@@ -23,7 +23,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .graph import Graph, graph_fingerprint
+from .graph import Graph, GraphValidationError, graph_fingerprint, \
+    validate_graph
 
 __all__ = ["BlockedGraph", "build_blocked", "choose_block_size"]
 
@@ -130,6 +131,7 @@ def build_blocked(
     fast_mem_bytes: int = 4 * 1024 * 1024,
     classify: bool = True,
     bin_thresholds: Union[Tuple[float, float], str] = DEFAULT_BIN_THRESHOLDS,
+    validate: Optional[str] = None,
 ) -> BlockedGraph:
     """Host-side TOCAB preprocessing (paper §3.1 phase 1).
 
@@ -143,8 +145,16 @@ def build_blocked(
     bin to a matched execution strategy.  ``bin_thresholds`` may be an
     ``(lo, hi)`` pair of edges-per-row cutoffs or ``'auto'`` (per-graph
     terciles).
+
+    ``validate="cheap"`` / ``"full"`` runs CSR validation on ``g`` first
+    (:func:`repro.core.graph.validate_graph`) — malformed inputs fail with a
+    structured :class:`~repro.core.graph.GraphValidationError` instead of
+    corrupting the blocked slabs.  Independently of ``validate``, padded
+    slab sizes are always checked against int32 addressing.
     """
     assert direction in ("pull", "push")
+    if validate is not None:
+        validate_graph(g, level=validate)
     if block_size is None:
         block_size = choose_block_size(g.n, fast_mem_bytes=fast_mem_bytes)
     src, dst = g.edges()
@@ -184,6 +194,18 @@ def build_blocked(
     if blk.shape[0]:
         np.maximum.at(n_local, blk, local_id + 1)
     local_budget = _roundup(int(n_local.max(initial=1)), pad_locals_to)
+
+    # Padded slabs are flattened and indexed with int32 downstream (the
+    # phase-3 segment reduce, the Pallas kernels' id maps) — overflow here
+    # would wrap silently at runtime, so it is always a hard error.
+    int32_max = np.iinfo(np.int32).max
+    for what, size in (("edge", num_blocks * edge_budget),
+                       ("partial", num_blocks * local_budget)):
+        if size > int32_max:
+            raise GraphValidationError(
+                "budget_overflow",
+                f"flat {what} slab has {size} entries "
+                f"(num_blocks={num_blocks}), exceeding int32 addressing")
 
     # --- fill padded slabs ---
     shape_e = (num_blocks, edge_budget)

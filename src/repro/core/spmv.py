@@ -29,6 +29,7 @@ def spmv(
     dense_impl: Optional[str] = None,
     impl: str = "slab",
     scale=None,
+    allow_fallback=None,
 ):
     """y[dst] = Σ_{(src,dst)} A[src,dst]·x[src].
 
@@ -39,16 +40,24 @@ def spmv(
     ``dense_impl`` forces the balanced dense-bin backend (``'pallas'`` /
     ``'onehot'``); ``impl='fused'`` routes the gc variants through the
     persistent no-partial-slab pipeline.  ``scale`` fuses ``y*scale`` into
-    the engine epilogue (gc variants)."""
+    the engine epilogue (gc variants).  ``impl='auto'`` (or
+    ``allow_fallback=True``) arms the fused→slab→reference degradation
+    ladder on the gc variants."""
+    from repro.resilience import degrade
+
     obj = bg if bg is not None else dg
     rs = tocab.resolve_schedule(obj, schedule, workload="spmv")
     ri = tocab.resolve_impl(obj, impl, workload="spmv")
     rs, ri = tocab._reconcile_fused(rs, ri, schedule, impl)
-    return _spmv_jit(dg, bg, x, variant, rs, dense_impl, ri, scale)
+    allow = degrade.fallback_allowed(impl, allow_fallback)
+    if allow and bg is not None and variant in ("gc-pull", "gc-push"):
+        site = "tocab_pull" if variant == "gc-pull" else "tocab_push"
+        ri = degrade.apply_verdict(bg.fingerprint, site, ri)
+    return _spmv_jit(dg, bg, x, variant, rs, dense_impl, ri, scale, allow)
 
 
 @partial(jax.jit, static_argnames=("variant", "schedule", "dense_impl",
-                                   "impl"))
+                                   "impl", "allow_fallback"))
 def _spmv_jit(
     dg: DeviceGraph,
     bg: Optional[BlockedGraph],
@@ -58,6 +67,7 @@ def _spmv_jit(
     dense_impl: Optional[str],
     impl: str = "slab",
     scale=None,
+    allow_fallback: bool = False,
 ):
     epilogue = None if scale is None else (scale, 0.0)
     if variant == "base":
@@ -69,10 +79,12 @@ def _spmv_jit(
     elif variant == "gc-pull":
         return tocab.tocab_pull(bg, x, reduce="sum", schedule=schedule,
                                 dense_impl=dense_impl, impl=impl,
-                                epilogue=epilogue)
+                                epilogue=epilogue,
+                                allow_fallback=allow_fallback)
     elif variant == "gc-push":
         return tocab.tocab_push(bg, x, reduce="sum", schedule=schedule,
-                                impl=impl, epilogue=epilogue)
+                                impl=impl, epilogue=epilogue,
+                                allow_fallback=allow_fallback)
     else:
         raise ValueError(f"unknown SpMV variant {variant!r}")
     return y if scale is None else y * scale

@@ -300,6 +300,32 @@ def _slab_epilogue(out, reduce: str, epilogue):
     return out * mul + add
 
 
+def _ladder_dispatch(engine: str, bg, ri: str, allow: bool, fused_thunk,
+                     slab_thunk, reference_thunk):
+    """Degradation-ladder dispatch for one engine call (see
+    :mod:`repro.resilience.degrade`).  ``engine`` is the dispatch-site
+    label (``tocab_pull``/``tocab_push``/``tocab_edge_reduce``);
+    fingerprint-keyed verdicts make the fallback a once-per-(graph,
+    engine) decision, not a per-iteration one."""
+    from repro.resilience import degrade
+
+    rungs = []
+    if ri == "fused":
+        rungs.append(("fused", fused_thunk))
+    if ri in ("fused", "slab"):
+        rungs.append(("slab", slab_thunk))
+    if reference_thunk is not None:
+        rungs.append(("reference", reference_thunk))
+    if not rungs or ri not in ("fused", "slab", "reference"):
+        raise ValueError(f"unknown impl {ri!r}")
+    if ri == "reference":
+        return reference_thunk()
+    if not allow:
+        return rungs[0][1]()
+    return degrade.dispatch(engine, bg.fingerprint, rungs,
+                            allow_fallback=True)
+
+
 @partial(jax.jit, static_argnames=("reduce", "combine", "schedule",
                                    "dense_impl"))
 def _tocab_pull_jit(
@@ -331,6 +357,7 @@ def tocab_pull(
     dense_impl: Optional[str] = None,
     impl: str = "slab",
     epilogue=None,
+    allow_fallback: Optional[bool] = None,
 ):
     """``schedule='uniform'`` processes every block with the same segmented
     reduce; ``'balanced'`` dispatches each sparsity bin of the build-time
@@ -344,20 +371,44 @@ def tocab_pull(
     (``repro.kernels.tocab_fused``): no partial slab in HBM, bit-identical
     results; ``'auto'`` consults the tuning DB.  ``epilogue=(mul, add)``
     fuses the per-vertex apply step ``out*mul + add`` (sum semiring only) —
-    the slab path applies the identical expression as a trailing pass."""
+    the slab path applies the identical expression as a trailing pass.
+
+    ``allow_fallback`` arms the fused→slab→reference degradation ladder
+    (:mod:`repro.resilience.degrade`); default ``None`` means on for
+    ``impl='auto'`` and env-gated for explicit impls."""
+    from repro.resilience import chaos, degrade
+
     rs = resolve_schedule(bg, schedule)
     ri = resolve_impl(bg, impl)
     rs, ri = _reconcile_fused(rs, ri, schedule, impl)
-    if ri == "fused":
+    allow = degrade.fallback_allowed(impl, allow_fallback)
+    if allow:
+        ri = degrade.apply_verdict(bg.fingerprint, "tocab_pull", ri)
+
+    def _fused():
+        chaos.maybe_raise("kernel.tocab_fused")
         from repro.kernels.tocab_fused import fused_pull
 
         _record_engine("tocab_pull_fused", "pull", bg.num_blocks, bg.m)
         return fused_pull(bg, values, reduce, combine, epilogue)
-    if ri != "slab":
-        raise ValueError(f"unknown impl {ri!r}")
-    out = _tocab_pull_jit(bg, values, reduce=reduce, combine=combine,
-                          schedule=rs, dense_impl=dense_impl)
-    return _slab_epilogue(out, reduce, epilogue)
+
+    def _slab():
+        if allow:
+            chaos.maybe_raise("kernel.tocab_slab")
+        out = _tocab_pull_jit(bg, values, reduce=reduce, combine=combine,
+                              schedule=rs, dense_impl=dense_impl)
+        return _slab_epilogue(out, reduce, epilogue)
+
+    def _reference():
+        # eager uniform dataflow, no jax.jit anywhere on the way down —
+        # survives backend lowering/compile failures by construction
+        _record_engine("tocab_pull_reference", "pull", bg.num_blocks, bg.m)
+        partials = tocab_pull_partials(bg, values, reduce, combine)
+        return _slab_epilogue(reduce_partials(bg, partials, reduce),
+                              reduce, epilogue)
+
+    return _ladder_dispatch("tocab_pull", bg, ri, allow, _fused, _slab,
+                            _reference)
 
 
 @partial(jax.jit, static_argnames=("reduce", "combine", "schedule"))
@@ -375,7 +426,19 @@ def _tocab_push_jit(
         return balanced_push(bg, values, reduce, combine)
     if schedule != "uniform":
         raise ValueError(f"unknown schedule {schedule!r}")
-    _record_engine("tocab_push", "push", bg.num_blocks, bg.m)
+    return _tocab_push_uniform(bg, values, reduce, combine)
+
+
+def _tocab_push_uniform(
+    bg: BlockedGraph,
+    values: jnp.ndarray,
+    reduce: str = "sum",
+    combine: Optional[Callable] = None,
+    engine: str = "tocab_push",
+):
+    """Uniform push body — shared by the jitted wrapper above and the
+    eager ``reference`` rung of the degradation ladder."""
+    _record_engine(engine, "push", bg.num_blocks, bg.m)
     # Gather each unique source's value once per block (the data-reuse win).
     block_contrib = jnp.take(values, bg.id_map, axis=0, mode="fill", fill_value=0)
     msgs = jnp.take_along_axis(
@@ -415,28 +478,46 @@ def tocab_push(
     schedule: str = "uniform",
     impl: str = "slab",
     epilogue=None,
+    allow_fallback: Optional[bool] = None,
 ):
     """Push (Alg. 5): block by destination range; contributions of the few
     distinct sources of a block are fetched *once* through ``id_map``
     (block_contrib slab), then fanned out per edge; accumulation is confined
     to the block's destination window (conflict-free, no atomics on TPU).
-    ``schedule`` as in :func:`tocab_pull` (including ``'auto'``); ``impl``
-    and ``epilogue`` as in :func:`tocab_pull` — the fused push visits blocks
-    in the balance module's bin-major order (disjoint destination windows
-    keep that bit-identical)."""
+    ``schedule`` as in :func:`tocab_pull` (including ``'auto'``); ``impl``,
+    ``epilogue`` and ``allow_fallback`` as in :func:`tocab_pull` — the fused
+    push visits blocks in the balance module's bin-major order (disjoint
+    destination windows keep that bit-identical)."""
+    from repro.resilience import chaos, degrade
+
     rs = resolve_schedule(bg, schedule)
     ri = resolve_impl(bg, impl)
     rs, ri = _reconcile_fused(rs, ri, schedule, impl)
-    if ri == "fused":
+    allow = degrade.fallback_allowed(impl, allow_fallback)
+    if allow:
+        ri = degrade.apply_verdict(bg.fingerprint, "tocab_push", ri)
+
+    def _fused():
+        chaos.maybe_raise("kernel.tocab_fused")
         from repro.kernels.tocab_fused import fused_push
 
         _record_engine("tocab_push_fused", "push", bg.num_blocks, bg.m)
         return fused_push(bg, values, reduce, combine, epilogue)
-    if ri != "slab":
-        raise ValueError(f"unknown impl {ri!r}")
-    out = _tocab_push_jit(bg, values, reduce=reduce, combine=combine,
-                          schedule=rs)
-    return _slab_epilogue(out, reduce, epilogue)
+
+    def _slab():
+        if allow:
+            chaos.maybe_raise("kernel.tocab_slab")
+        out = _tocab_push_jit(bg, values, reduce=reduce, combine=combine,
+                              schedule=rs)
+        return _slab_epilogue(out, reduce, epilogue)
+
+    def _reference():
+        out = _tocab_push_uniform(bg, values, reduce, combine,
+                                  engine="tocab_push_reference")
+        return _slab_epilogue(out, reduce, epilogue)
+
+    return _ladder_dispatch("tocab_push", bg, ri, allow, _fused, _slab,
+                            _reference)
 
 
 # ====================================================================== #
@@ -448,37 +529,8 @@ def blocked_edge_values(bg: BlockedGraph, flat_vals: jnp.ndarray) -> jnp.ndarray
     return jnp.take(flat_vals, bg.edge_perm, axis=0, mode="fill", fill_value=0)
 
 
-def tocab_edge_reduce(
-    bg: BlockedGraph,
-    flat_edge_vals: jnp.ndarray,  # (m, ...) in original edge order
-    reduce: str = "sum",
-    schedule: str = "uniform",
-    impl: str = "slab",
-    epilogue=None,
-):
-    """Reduce *edge* values to the compacted side (dst for pull layout)
-    through the partial-slab + reduction machinery — the GNN primitive
-    (edge messages → node aggregate) in TOCAB form.  ``impl``/``epilogue``
-    as in :func:`tocab_pull`."""
-    rs = resolve_schedule(bg, schedule)
-    ri = resolve_impl(bg, impl)
-    schedule, ri = _reconcile_fused(rs, ri, schedule, impl)
-    if ri == "fused":
-        from repro.kernels.tocab_fused import fused_edge_reduce
-
-        _record_engine("tocab_edge_reduce_fused", bg.direction,
-                       bg.num_blocks, bg.m)
-        return fused_edge_reduce(bg, flat_edge_vals, reduce, epilogue)
-    if ri != "slab":
-        raise ValueError(f"unknown impl {ri!r}")
-    if schedule == "balanced":
-        from .balance import balanced_edge_reduce
-
-        return _slab_epilogue(
-            balanced_edge_reduce(bg, flat_edge_vals, reduce), reduce,
-            epilogue)
-    if schedule != "uniform":
-        raise ValueError(f"unknown schedule {schedule!r}")
+def _edge_reduce_uniform(bg: BlockedGraph, flat_edge_vals, reduce: str):
+    """Uniform edge-reduce body (eager; shared by slab and reference)."""
     vals = blocked_edge_values(bg, flat_edge_vals)
     ident = jnp.asarray(REDUCE_IDENTITY[reduce], vals.dtype)
     mask = bg.edge_mask
@@ -495,8 +547,63 @@ def tocab_edge_reduce(
         bg.flat_partial_size, reduce,
     )
     partials = partials.reshape((bg.num_blocks, bg.local_budget) + tail)
-    return _slab_epilogue(reduce_partials(bg, partials, reduce), reduce,
-                          epilogue)
+    return reduce_partials(bg, partials, reduce)
+
+
+def tocab_edge_reduce(
+    bg: BlockedGraph,
+    flat_edge_vals: jnp.ndarray,  # (m, ...) in original edge order
+    reduce: str = "sum",
+    schedule: str = "uniform",
+    impl: str = "slab",
+    epilogue=None,
+    allow_fallback: Optional[bool] = None,
+):
+    """Reduce *edge* values to the compacted side (dst for pull layout)
+    through the partial-slab + reduction machinery — the GNN primitive
+    (edge messages → node aggregate) in TOCAB form.  ``impl`` /
+    ``epilogue`` / ``allow_fallback`` as in :func:`tocab_pull`."""
+    from repro.resilience import chaos, degrade
+
+    rs = resolve_schedule(bg, schedule)
+    ri = resolve_impl(bg, impl)
+    schedule, ri = _reconcile_fused(rs, ri, schedule, impl)
+    allow = degrade.fallback_allowed(impl, allow_fallback)
+    if allow:
+        ri = degrade.apply_verdict(bg.fingerprint, "tocab_edge_reduce", ri)
+    if schedule not in ("uniform", "balanced"):
+        raise ValueError(f"unknown schedule {schedule!r}")
+
+    def _fused():
+        chaos.maybe_raise("kernel.tocab_fused")
+        from repro.kernels.tocab_fused import fused_edge_reduce
+
+        _record_engine("tocab_edge_reduce_fused", bg.direction,
+                       bg.num_blocks, bg.m)
+        return fused_edge_reduce(bg, flat_edge_vals, reduce, epilogue)
+
+    def _slab():
+        if allow:
+            chaos.maybe_raise("kernel.tocab_slab")
+        if schedule == "balanced":
+            from .balance import balanced_edge_reduce
+
+            return _slab_epilogue(
+                balanced_edge_reduce(bg, flat_edge_vals, reduce), reduce,
+                epilogue)
+        return _slab_epilogue(
+            _edge_reduce_uniform(bg, flat_edge_vals, reduce), reduce,
+            epilogue)
+
+    def _reference():
+        _record_engine("tocab_edge_reduce_reference", bg.direction,
+                       bg.num_blocks, bg.m)
+        return _slab_epilogue(
+            _edge_reduce_uniform(bg, flat_edge_vals, reduce), reduce,
+            epilogue)
+
+    return _ladder_dispatch("tocab_edge_reduce", bg, ri, allow, _fused,
+                            _slab, _reference)
 
 
 def tocab_gather_src(bg: BlockedGraph, values: jnp.ndarray) -> jnp.ndarray:

@@ -20,6 +20,23 @@ import numpy as np
 from repro.configs import get_arch
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import registry as _obs
+from repro.resilience import chaos as _chaos
+from repro.resilience.retry import Policy
+
+#: per-batch retry: the serving steps are pure functions of their inputs
+#: (cache in → cache out), so re-running a failed batch is idempotent.
+BATCH_POLICY = Policy(max_attempts=3, base_delay=0.02)
+
+
+def _resilient_step(fn, *args):
+    """One serving batch step behind the retry policy; ``serve.batch`` is a
+    chaos site, so fault-injection runs exercise the retry path."""
+
+    def _once():
+        _chaos.maybe_raise("serve.batch")
+        return fn(*args)
+
+    return BATCH_POLICY.call(_once, site="serve.batch")
 
 
 def serve_lm(spec, args):
@@ -42,7 +59,8 @@ def serve_lm(spec, args):
     with obs_trace.span("serve.prefill", requests=B,
                         prompt_len=args.prompt_len) as sp:
         for t in range(args.prompt_len - 1):
-            _, cache = decode(params, prompts[:, t:t + 1], jnp.int32(t), cache)
+            _, cache = _resilient_step(
+                decode, params, prompts[:, t:t + 1], jnp.int32(t), cache)
         sp.block(cache)
     t_prefill = time.perf_counter() - t0
     _obs.histogram("serve.prefill_seconds",
@@ -54,7 +72,8 @@ def serve_lm(spec, args):
                         max_new=args.max_new) as sp:
         for t in range(args.prompt_len - 1, args.prompt_len + args.max_new - 1):
             td = time.perf_counter()
-            logits, cache = decode(params, tok, jnp.int32(t), cache)
+            logits, cache = _resilient_step(
+                decode, params, tok, jnp.int32(t), cache)
             tok = jnp.argmax(logits, axis=-1)[:, None].astype(jnp.int32)
             jax.block_until_ready(tok)
             _obs.histogram("serve.decode_seconds",
@@ -92,7 +111,7 @@ def serve_recsys(spec, args):
     with obs_trace.span("serve.score", requests=args.requests, reps=reps):
         for _ in range(reps):
             tr = time.perf_counter()
-            vals, idx = fn(params, items)
+            vals, idx = _resilient_step(fn, params, items)
             jax.block_until_ready(vals)
             score_hist.observe(time.perf_counter() - tr)
     dt = (time.perf_counter() - t0) / reps

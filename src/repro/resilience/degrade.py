@@ -1,0 +1,113 @@
+"""Engine degradation ladder: fused → slab → reference.
+
+Gunrock-style frameworks survive in production because every specialized
+kernel has a baseline to fall back on.  Here the ladder is expressed as an
+ordered list of *rungs* — ``(name, thunk)`` pairs — and :func:`dispatch`
+walks it: the first rung that returns wins; a rung that raises (a Pallas
+lowering failure, an injected chaos fault, a jit compile error) records a
+``resilience.fallbacks{site,from,to}`` counter and hands off to the next.
+
+The verdict is **memoized per (graph fingerprint, dispatch site)**: once
+fused is known-broken for a graph, every later call — including
+``impl="auto"`` resolution in ``pagerank``/``spmv`` — starts at the
+working rung instead of re-failing once per iteration or per trace.
+
+``allow_fallback`` semantics (:func:`fallback_allowed`):
+
+* ``True``/``False`` — explicit caller choice, wins outright;
+* ``None`` + the impl argument was ``"auto"`` — fallback on (the caller
+  delegated the engine choice, so it accepts a degraded one);
+* ``None`` + an explicit impl — fallback only when the
+  ``REPRO_RESILIENCE_FALLBACK`` env var is truthy (the chaos-smoke CI job
+  sets it so explicitly-fused tests degrade instead of dying).
+"""
+from __future__ import annotations
+
+import os
+import threading
+from typing import Optional, Sequence, Tuple
+
+from repro.obs.metrics import registry as _obs
+
+__all__ = [
+    "LADDER",
+    "ENV_FALLBACK",
+    "fallback_allowed",
+    "apply_verdict",
+    "record_verdict",
+    "dispatch",
+    "clear",
+]
+
+#: canonical rung order, strongest (most specialized) first
+LADDER = ("fused", "slab", "reference")
+
+ENV_FALLBACK = "REPRO_RESILIENCE_FALLBACK"
+
+_lock = threading.Lock()
+# (graph fingerprint, dispatch site) -> rung name decided by a past failure
+_VERDICTS: dict = {}
+
+
+def fallback_allowed(requested: str, allow_fallback: Optional[bool]) -> bool:
+    """Resolve the ladder opt-in for one dispatch (see module docstring).
+    ``requested`` is the caller's *pre-resolution* impl argument."""
+    if allow_fallback is not None:
+        return bool(allow_fallback)
+    if requested == "auto":
+        return True
+    return os.environ.get(ENV_FALLBACK, "").lower() in ("1", "true", "yes")
+
+
+def apply_verdict(fp: Optional[str], site: str, impl: str) -> str:
+    """Skip straight to a memoized verdict: if a past dispatch for this
+    (graph, site) degraded below ``impl``, return the decided rung."""
+    if fp is None:
+        return impl
+    v = _VERDICTS.get((fp, site))
+    if v is None or v not in LADDER or impl not in LADDER:
+        return impl
+    return v if LADDER.index(v) > LADDER.index(impl) else impl
+
+
+def record_verdict(fp: Optional[str], site: str, rung: str):
+    if fp is None:
+        return
+    with _lock:
+        _VERDICTS[(fp, site)] = rung
+
+
+def dispatch(site: str, fp: Optional[str],
+             rungs: Sequence[Tuple[str, callable]],
+             allow_fallback: bool = True):
+    """Run the first working rung of ``rungs``; on failure fall through,
+    recording the fallback and memoizing the landing rung.  With
+    ``allow_fallback=False`` (or on the last rung) the failure propagates
+    unchanged."""
+    names = [n for n, _ in rungs]
+    start = 0
+    if fp is not None:
+        v = _VERDICTS.get((fp, site))
+        if v in names:
+            start = names.index(v)
+    for i in range(start, len(rungs)):
+        name, thunk = rungs[i]
+        try:
+            return thunk()
+        except Exception as e:
+            if not allow_fallback or i + 1 >= len(rungs):
+                raise
+            nxt = names[i + 1]
+            _obs.counter(
+                "resilience.fallbacks",
+                "engine degradations by dispatch site",
+            ).inc(site=site, error=type(e).__name__,
+                  **{"from": name, "to": nxt})
+            record_verdict(fp, site, nxt)
+    raise RuntimeError(f"{site}: empty degradation ladder")  # unreachable
+
+
+def clear():
+    """Forget memoized verdicts (tests / after a backend change)."""
+    with _lock:
+        _VERDICTS.clear()

@@ -3,13 +3,21 @@
 Layout per step::
 
     <dir>/step_000042/
-        manifest.json      # treedef, shapes, dtypes, step, mesh shape
+        manifest.json      # treedef, shapes, dtypes, per-leaf crc32, step
         arrays.npz         # flattened leaves (process-local; single-host here)
     <dir>/LATEST           # atomic pointer file
 
-Fault-tolerance contract: writes go to ``step_X.tmp`` then ``os.rename`` —
-a crash mid-write never corrupts the LATEST checkpoint.  Restore accepts a
-different mesh (elastic): leaves are re-placed with the target shardings.
+Fault-tolerance contract: writes go to ``step_X.tmp`` then ``os.replace`` —
+a crash mid-write never corrupts the LATEST checkpoint.  Every leaf's crc32
+is recorded in the manifest; :func:`latest_step` and :func:`restore` treat a
+step with a missing file, unparsable manifest, or checksum mismatch as
+*invalid* and fall back to the newest valid step (torn or bit-rotted
+checkpoints are skipped, not loaded).  Save/restore are wrapped in a small
+retry policy (``repro.resilience.retry``) so transient IO faults — including
+injected ``ckpt.save`` / ``ckpt.restore`` chaos faults — don't kill a run.
+
+Restore accepts a different mesh (elastic): leaves are re-placed with the
+target shardings.
 """
 from __future__ import annotations
 
@@ -17,12 +25,31 @@ import json
 import os
 import shutil
 import threading
+import zlib
 from typing import Any, Optional
 
 import jax
 import numpy as np
 
-__all__ = ["save", "restore", "latest_step", "CheckpointManager"]
+from repro.obs.metrics import registry as _obs
+from repro.resilience import chaos as _chaos
+from repro.resilience.retry import Policy
+
+__all__ = [
+    "save", "restore", "latest_step", "valid_steps", "CheckpointError",
+    "CheckpointManager",
+]
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint step exists but failed validation (torn write, checksum
+    mismatch, unparsable manifest)."""
+
+
+#: retry policy for checkpoint IO: transient faults (disk hiccups, injected
+#: chaos) get three attempts with a short backoff before surfacing.
+IO_POLICY = Policy(max_attempts=3, base_delay=0.05,
+                   retry_on=(OSError, _chaos.ChaosError))
 
 # numpy can't round-trip ml_dtypes through savez; store raw views + dtype
 _EXOTIC = {}
@@ -54,54 +81,151 @@ def _paths(tree) -> list[str]:
     return [jax.tree_util.keystr(kp) for kp, _ in flat]
 
 
+def _leaf_crc(a: np.ndarray) -> int:
+    """crc32 of a *storable* leaf's bytes (what actually hits disk)."""
+    return zlib.crc32(np.ascontiguousarray(a).tobytes()) & 0xFFFFFFFF
+
+
+def _step_dir(ckpt_dir: str, step: int) -> str:
+    return os.path.join(ckpt_dir, f"step_{step:08d}")
+
+
 def save(ckpt_dir: str, step: int, tree: Any, extra: Optional[dict] = None) -> str:
+    return IO_POLICY.call(_save_once, ckpt_dir, step, tree, extra,
+                          site="ckpt.save")
+
+
+def _save_once(ckpt_dir: str, step: int, tree: Any,
+               extra: Optional[dict]) -> str:
+    _chaos.maybe_raise("ckpt.save")
     os.makedirs(ckpt_dir, exist_ok=True)
-    final = os.path.join(ckpt_dir, f"step_{step:08d}")
+    final = _step_dir(ckpt_dir, step)
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
     leaves, treedef = jax.tree.flatten(tree)
-    host_leaves = [np.asarray(jax.device_get(x)) for x in leaves]
+    raw = [np.asarray(jax.device_get(x)) for x in leaves]
+    host_leaves = [_to_storable(a) for a in raw]
     np.savez(os.path.join(tmp, "arrays.npz"),
-             **{f"leaf_{i}": _to_storable(a)
-                for i, a in enumerate(host_leaves)})
+             **{f"leaf_{i}": a for i, a in enumerate(host_leaves)})
     manifest = {
         "step": step,
         "paths": _paths(tree),
-        "shapes": [list(a.shape) for a in host_leaves],
-        "dtypes": [str(a.dtype) for a in host_leaves],
+        "shapes": [list(a.shape) for a in raw],
+        "dtypes": [str(a.dtype) for a in raw],
+        "checksums": [_leaf_crc(a) for a in host_leaves],
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
         json.dump(manifest, f)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)  # atomic commit
+    os.replace(tmp, final)  # atomic commit
     latest_tmp = os.path.join(ckpt_dir, "LATEST.tmp")
     with open(latest_tmp, "w") as f:
         f.write(str(step))
-    os.rename(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
+    os.replace(latest_tmp, os.path.join(ckpt_dir, "LATEST"))
     return final
 
 
+def _validate_step(ckpt_dir: str, step: int) -> Optional[str]:
+    """None if the step directory is a loadable checkpoint, else the reason
+    it isn't (``"partial"`` / ``"manifest"`` / ``"arrays"`` / ``"checksum"``)."""
+    d = _step_dir(ckpt_dir, step)
+    mpath, apath = os.path.join(d, "manifest.json"), os.path.join(d, "arrays.npz")
+    if not (os.path.isfile(mpath) and os.path.isfile(apath)):
+        return "partial"
+    try:
+        with open(mpath) as f:
+            manifest = json.load(f)
+        n_leaves = len(manifest["paths"])
+        sums = manifest.get("checksums")
+    except (OSError, ValueError, KeyError, TypeError):
+        return "manifest"
+    try:
+        with np.load(apath) as data:
+            for i in range(n_leaves):
+                a = data[f"leaf_{i}"]
+                if sums is not None and _leaf_crc(a) != int(sums[i]):
+                    return "checksum"
+    except Exception:
+        return "arrays"
+    return None
+
+
+def valid_steps(ckpt_dir: str) -> list[int]:
+    """All steps on disk that pass validation, ascending."""
+    return [s for s in _list_steps(ckpt_dir)
+            if _validate_step(ckpt_dir, s) is None]
+
+
+def _list_steps(ckpt_dir: str) -> list[int]:
+    try:
+        names = os.listdir(ckpt_dir)
+    except FileNotFoundError:
+        return []
+    steps = []
+    for nm in names:
+        if nm.startswith("step_") and not nm.endswith(".tmp"):
+            try:
+                steps.append(int(nm.split("_")[1]))
+            except ValueError:
+                pass
+    return sorted(steps)
+
+
 def latest_step(ckpt_dir: str) -> Optional[int]:
+    """Newest *valid* step: the LATEST pointer if it checks out, else the
+    newest on-disk step that does.  Invalid candidates (torn writes,
+    checksum failures) are skipped with a ``ckpt.skipped`` counter."""
+    candidates = []
     p = os.path.join(ckpt_dir, "LATEST")
-    if not os.path.exists(p):
-        return None
-    with open(p) as f:
-        return int(f.read().strip())
+    if os.path.exists(p):
+        try:
+            with open(p) as f:
+                candidates.append(int(f.read().strip()))
+        except (OSError, ValueError):
+            pass
+    for s in reversed(_list_steps(ckpt_dir)):
+        if s not in candidates:
+            candidates.append(s)
+    for s in candidates:
+        reason = _validate_step(ckpt_dir, s)
+        if reason is None:
+            return s
+        _obs.counter(
+            "ckpt.skipped", "checkpoint steps skipped as invalid on load"
+        ).inc(1, reason=reason)
+    return None
 
 
 def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
             shardings: Any = None) -> tuple[Any, int, dict]:
     """Restore into the structure of ``target``.  ``shardings`` (same
-    structure or a single sharding) enables elastic re-mesh on load."""
+    structure or a single sharding) enables elastic re-mesh on load.
+
+    With ``step=None`` the newest *valid* checkpoint is loaded — partial or
+    checksum-failing steps are skipped.  An explicit ``step`` is validated
+    and raises :class:`CheckpointError` if it doesn't check out."""
+    return IO_POLICY.call(_restore_once, ckpt_dir, target, step, shardings,
+                          site="ckpt.restore")
+
+
+def _restore_once(ckpt_dir: str, target: Any, step: Optional[int],
+                  shardings: Any) -> tuple[Any, int, dict]:
+    _chaos.maybe_raise("ckpt.restore")
     if step is None:
         step = latest_step(ckpt_dir)
         if step is None:
-            raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
+            raise FileNotFoundError(f"no valid checkpoint in {ckpt_dir}")
+    else:
+        reason = _validate_step(ckpt_dir, step)
+        if reason is not None:
+            raise CheckpointError(
+                f"checkpoint step {step} in {ckpt_dir} failed validation "
+                f"({reason})")
+    d = _step_dir(ckpt_dir, step)
     with open(os.path.join(d, "manifest.json")) as f:
         manifest = json.load(f)
     data = np.load(os.path.join(d, "arrays.npz"))
@@ -127,7 +251,11 @@ def restore(ckpt_dir: str, target: Any, step: Optional[int] = None,
 
 
 class CheckpointManager:
-    """Async writer with keep-k GC and crash-safe commits."""
+    """Async writer with keep-k GC and crash-safe commits.
+
+    A failure on the background writer thread is recorded and re-raised on
+    the next :meth:`save` / :meth:`wait` / :meth:`restore` call — async
+    write errors are surfaced, never swallowed."""
 
     def __init__(self, ckpt_dir: str, keep: int = 3, async_write: bool = True):
         self.dir = ckpt_dir
@@ -149,6 +277,9 @@ class CheckpointManager:
             save(self.dir, step, host_tree, extra)
             self._gc()
         except BaseException as e:  # surfaced on next wait()
+            _obs.counter(
+                "ckpt.async_errors", "failures on the async checkpoint writer"
+            ).inc(1, error=type(e).__name__)
             self._error = e
 
     def save(self, step: int, tree: Any, extra: Optional[dict] = None):

@@ -106,7 +106,7 @@ def cmd_tune(args) -> int:
     summary = tuner.tune(
         graphs, workloads=workloads, budget=budget, space=space,
         db_dir=args.db_dir, cfg=cfg, force=args.force, verbose=args.verbose,
-        dtype=args.dtype)
+        dtype=args.dtype, trial_timeout=args.trial_timeout)
     for e in summary["entries"]:
         src = "db-hit" if e.get("db_hit") else (
             f"{len(e['trials'])} trials, {e['pruned_analytic']} pruned")
@@ -220,6 +220,10 @@ def main(argv: Optional[list] = None) -> int:
                         "keyed on")
     t.add_argument("--force", action="store_true",
                    help="re-tune even on a DB hit")
+    t.add_argument("--trial-timeout", default=None, type=float,
+                   help="per-candidate wall-clock bound in seconds; a "
+                        "candidate that exceeds it is marked poisoned in "
+                        "the DB and skipped by later sweeps")
     t.add_argument("--verbose", action="store_true")
     t.set_defaults(fn=cmd_tune)
 

@@ -25,6 +25,8 @@ from repro.core.pagerank import pagerank_iteration
 from repro.core.partition import build_blocked
 from repro.obs import trace as obs_trace
 from repro.obs.metrics import registry as _obs
+from repro.resilience import chaos as _chaos
+from repro.resilience.retry import call_with_timeout
 
 from .space import Candidate, TrialBudget
 
@@ -140,18 +142,28 @@ def run_trial(g: Graph, candidate: Candidate, workload: str = "pagerank",
               budget: Optional[TrialBudget] = None,
               graph_name: Optional[str] = None,
               warmup: int = 1, reps: int = 3,
-              dtype: str = "float32") -> Trial:
+              dtype: str = "float32",
+              timeout: Optional[float] = None) -> Trial:
     """Build, time, and record one candidate.
 
     Engines with unusable combinations surface as exceptions — the sweep
-    in ``repro.tune.tuner`` converts those into skipped trials."""
+    in ``repro.tune.tuner`` converts those into skipped trials and marks
+    the candidate poisoned.  ``timeout`` (seconds) bounds the whole
+    build+compile+measure of this candidate (a hung compile raises
+    ``TimeoutError`` instead of wedging the sweep); ``tune.trial`` is an
+    opt-in chaos site."""
+    _chaos.maybe_raise("tune.trial")
     if budget is not None:
         warmup, reps = budget.warmup, budget.reps
-    dg, bg = build_for(g, candidate)
-    fn, args = _workload_fn(workload, g, dg, bg, candidate, dtype)
-    us = time_fn(fn, args, warmup, reps,
-                 workload=workload, candidate=candidate.key(),
-                 graph=graph_name or graph_fingerprint(g))
+
+    def _measure():
+        dg, bg = build_for(g, candidate)
+        fn, args = _workload_fn(workload, g, dg, bg, candidate, dtype)
+        return time_fn(fn, args, warmup, reps,
+                       workload=workload, candidate=candidate.key(),
+                       graph=graph_name or graph_fingerprint(g))
+
+    us = call_with_timeout(_measure, timeout)
     eps = g.m / max(us * 1e-6, 1e-12)
     labels = dict(workload=workload, candidate=candidate.key())
     if graph_name:

@@ -57,10 +57,15 @@ def tune_graph(
     force: bool = False,
     default: Optional[Candidate] = None,
     verbose: bool = False,
+    trial_timeout: Optional[float] = None,
 ) -> dict:
     """Tune one (graph, workload); returns the DB entry (existing one on a
     DB hit).  The entry records every trial, the analytic prune, and the
-    chosen candidate."""
+    chosen candidate.
+
+    A candidate that crashes or exceeds ``trial_timeout`` seconds is marked
+    *poisoned* in the DB — later sweeps (force or not) skip it upfront
+    instead of re-running a known failure."""
     path = db.db_path(db_dir)
     fp = graph_fingerprint(g)
     key = db.entry_key(fp, dtype=dtype, workload=workload)
@@ -77,20 +82,30 @@ def tune_graph(
         g, cands, prune_ratio=budget.prune_ratio,
         graph_name=graph_name, workload=workload)
     kept = kept[: budget.max_trials]
+    poisoned = db.poisoned_for(key, path)
+    poisoned_skipped = [c.key() for c in kept if c.key() in poisoned]
+    if poisoned_skipped:
+        kept = [c for c in kept if c.key() not in poisoned]
+        _obs.counter(
+            "tune.poisoned_skipped",
+            "poisoned candidates skipped before trials",
+        ).inc(len(poisoned_skipped), workload=workload)
     trials, skipped = [], []
     for c in kept:
         try:
             trials.append(runner.run_trial(
                 g, c, workload=workload, budget=budget,
-                graph_name=graph_name, dtype=dtype))
+                graph_name=graph_name, dtype=dtype,
+                timeout=trial_timeout))
             if verbose:
                 print(f"#   trial {graph_name}/{workload} {c.key()}: "
                       f"{trials[-1].us:.0f}us", file=sys.stderr)
-        except Exception as e:  # unusable combo (e.g. kernel unavailable)
+        except Exception as e:  # unusable combo, crash, or timeout
             skipped.append({"candidate": c.to_json(), "error": repr(e)})
             _obs.counter("tune.trials_skipped",
                          "candidates that failed to run").inc(
                 workload=workload)
+            db.mark_poisoned(key, c.key(), repr(e), path)
     best = choose(trials)
     if best is None:
         raise RuntimeError(
@@ -112,6 +127,7 @@ def tune_graph(
         "pruned_analytic": len(pruned),
         "trials": [t.to_json() for t in trials],
         "skipped": skipped,
+        "poisoned_skipped": poisoned_skipped,
     }
     db.put_entry(key, entry, path)
     _record_chosen(entry, graph_name)
@@ -128,6 +144,7 @@ def tune(
     force: bool = False,
     verbose: bool = False,
     dtype: str = "float32",
+    trial_timeout: Optional[float] = None,
 ) -> dict:
     """Sweep a graph suite; returns a summary dict:
 
@@ -142,7 +159,7 @@ def tune(
             entry = tune_graph(
                 g, gname, workload=wl, space=space, budget=tb,
                 db_dir=db_dir, force=force, default=default,
-                verbose=verbose, dtype=dtype)
+                verbose=verbose, dtype=dtype, trial_timeout=trial_timeout)
             entries.append(entry)
             if entry.get("db_hit"):
                 db_hits += 1

@@ -14,11 +14,20 @@ import numpy as np
 import pytest
 
 from repro.core import (
-    DeviceGraph, baseline_pull, build_blocked, from_edges, pagerank,
+    DeviceGraph, build_blocked, from_edges, pagerank,
     pagerank_iteration, rmat_graph, spmv, tocab_edge_reduce, tocab_pull,
     tocab_push,
 )
 from repro.core.traversal import bfs, sssp
+from repro.resilience import chaos
+
+# Engine-identity tests (HLO shapes, fused obs counters) assert *which*
+# engine ran; under chaos-smoke the ladder may legitimately degrade fused
+# dispatch, so they skip when that site is armed.
+_chaos_on_fused = pytest.mark.skipif(
+    chaos.active_for("kernel.tocab_fused"),
+    reason="chaos can degrade fused dispatch to slab — engine-identity "
+           "assertions don't hold under fault injection")
 
 
 @pytest.fixture(scope="module")
@@ -252,6 +261,7 @@ def test_traversal_fused(setup):
 # --------------------------------------------------------------------- #
 # the point of the exercise: no partial slab in HBM
 # --------------------------------------------------------------------- #
+@_chaos_on_fused
 def test_fused_lowering_has_no_partial_slab(setup):
     """The compiled fused program must not allocate the
     ``(num_blocks, local_budget)`` partial buffer the slab path round-trips
@@ -276,6 +286,7 @@ def test_fused_lowering_has_no_partial_slab(setup):
         assert s not in fused_hlo, f"fused lowering materializes {s}"
 
 
+@_chaos_on_fused
 def test_fused_obs_counters(setup):
     from repro.obs.metrics import registry as _obs
 
